@@ -1,0 +1,110 @@
+"""Shared benchmark machinery: system setup, throughput measurement."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import Bipartite, build_bipartite
+from repro.core.engine import EagrEngine
+from repro.core.iob import construct_iob
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.streams.traces import batched_playback, generate_trace
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    events_per_s: float
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def row(self) -> str:
+        ex = " ".join(f"{k}={v}" for k, v in self.extras.items())
+        return f"{self.name},{self.events_per_s:.0f} ev/s,{ex}"
+
+
+def build_overlay(bp: Bipartite, algorithm: str, *, max_iterations: int = 4,
+                  seed: int = 0):
+    if algorithm == "iob":
+        return construct_iob(bp, max_iterations=max_iterations)
+    return construct_vnm(bp, variant=algorithm, max_iterations=max_iterations,
+                         seed=seed)
+
+
+def make_system(
+    *,
+    n_nodes: int = 20_000,
+    n_edges: int = 120_000,
+    aggregate: str = "sum",
+    algorithm: str = "vnm_n",
+    decisions: str = "mincut",        # 'mincut' | 'all_push' | 'all_pull' | 'greedy'
+    write_read_ratio: float = 1.0,
+    window: int = 8,
+    hops: int = 1,
+    split: bool = False,
+    seed: int = 0,
+):
+    """Graph -> bipartite -> overlay -> decisions -> engine + trace freqs."""
+    g = rmat_graph(n_nodes, n_edges, seed=seed)
+    bp = build_bipartite(g, hops=hops, two_hop_cap=64 if hops == 2 else None)
+    if decisions in ("all_push", "all_pull"):
+        # baselines share no partial aggregates (paper §5.1 comparison systems)
+        from repro.core.overlay import all_pull_overlay
+        ov = all_pull_overlay(bp.reader_inputs, bp.writers)
+        stats = None
+    else:
+        ov, stats = build_overlay(bp, algorithm, seed=seed)
+    trace = generate_trace(bp.writers, np.array(list(bp.reader_inputs)),
+                           n_events=1, write_read_ratio=write_read_ratio,
+                           seed=seed, n_base=g.n_nodes)
+    cm = D.cost_model_for(aggregate, window=window)
+    if decisions == "all_push":
+        dec = np.full(ov.n_nodes, D.PUSH)
+    elif decisions == "all_pull":
+        dec = np.array([D.PUSH if k == "W" else D.PULL for k in ov.kinds])
+    elif decisions == "greedy":
+        dec = D.decide_greedy(ov, trace.write_freq, trace.read_freq, cm,
+                              window=window)
+    else:
+        dec, _ = D.decide_mincut(ov, trace.write_freq, trace.read_freq, cm,
+                                 window=window)
+    if split:
+        ov, dec, _ = D.split_nodes(ov, dec, trace.write_freq, trace.read_freq,
+                                   cm, window=window)
+    agg = (make_aggregate(aggregate, k=5, domain=64) if aggregate == "topk"
+           else make_aggregate(aggregate))
+    eng = EagrEngine(ov, dec, agg, WindowSpec("tuple", window))
+    return eng, bp, g, stats
+
+
+def measure_throughput(eng: EagrEngine, bp, *, n_events: int = 60_000,
+                       write_read_ratio: float = 1.0, batch: int = 2048,
+                       seed: int = 1, warmup_batches: int = 4) -> float:
+    """End-to-end events/s over a Zipfian trace (paper §5.1 metric)."""
+    readers = np.array(list(bp.reader_inputs))
+    trace = generate_trace(bp.writers, readers, n_events,
+                           write_read_ratio=write_read_ratio, seed=seed)
+    batches = list(batched_playback(trace, batch))
+    # warmup = compile
+    for kind, ids, vals in batches[:warmup_batches]:
+        if kind == "write":
+            eng.write_batch(ids, vals, batch_size=batch)
+        else:
+            eng.read_batch(ids, batch_size=batch)
+    t0 = time.perf_counter()
+    n = 0
+    for kind, ids, vals in batches[warmup_batches:]:
+        if kind == "write":
+            eng.write_batch(ids, vals, batch_size=batch)
+        else:
+            eng.read_batch(ids, batch_size=batch)
+        n += len(ids)
+    import jax
+    jax.block_until_ready(eng.state.pao)
+    dt = time.perf_counter() - t0
+    return n / dt

@@ -1,0 +1,206 @@
+"""One benchmark per paper table/figure (EAGr, Mondal & Deshpande 2014).
+
+  fig8   sharing index per construction algorithm (per iteration)
+  fig9   VNM chunk-size sensitivity vs VNM_A
+  fig10  construction running time + memory
+  fig11a overlay depth distribution (VNM_A vs IOB)
+  fig11b VNM_N: effect of allowed negative edges on SI
+  fig12  pruning effectiveness before max-flow (by graph / by ratio)
+  fig13b throughput: overlay+dataflow vs all-push vs all-pull (fixed ratio)
+  fig13a adaptivity under workload shift
+  fig13c read latency vs push:pull cost ratio
+  fig14a end-to-end throughput across write:read ratios / aggregates
+  fig14b node-splitting benefit
+  fig14c 2-hop aggregates
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import (
+    BenchResult,
+    build_overlay,
+    make_system,
+    measure_throughput,
+)
+from repro.core import dataflow as D
+from repro.core.bipartite import build_bipartite
+from repro.core.vnm import construct_vnm
+from repro.graphs.generators import rmat_graph
+from repro.streams.traces import generate_trace, shift_workload
+
+GRAPH = dict(n_nodes=12_000, n_edges=72_000)
+SMALL = dict(n_nodes=5_000, n_edges=30_000)
+
+
+def _bp(seed=0, **kw):
+    g = rmat_graph(kw.get("n_nodes", GRAPH["n_nodes"]),
+                   kw.get("n_edges", GRAPH["n_edges"]), seed=seed)
+    return g, build_bipartite(g)
+
+
+def fig8_sharing_index(out):
+    """Two graph regimes, as in the paper: social-like (R-MAT; poor
+    compression, paper's LiveJournal/G+) and web-like (copying model with
+    out-neighborhood queries; high shared adjacency, paper's eu/uk graphs)."""
+    from repro.graphs.generators import copying_graph
+
+    g_soc, bp_soc = _bp()
+    g_web = copying_graph(SMALL["n_nodes"], out_degree=8, copy_p=0.75, seed=0)
+    bp_web = build_bipartite(
+        g_web, neighborhood=lambda g, v: g.out_neighbors(v))
+    for label, bp in (("social", bp_soc), ("web", bp_web)):
+        for algo in ("vnm", "vnm_a", "vnm_n", "vnm_d", "iob"):
+            ov, stats = build_overlay(bp, algo)
+            si = ov.sharing_index(bp.n_edges)
+            per_iter = getattr(stats, "si_per_iteration", [])
+            out(BenchResult(f"fig8/SI/{label}/{algo}", 0, dict(
+                si=round(si, 4),
+                per_iter=[round(x, 3) for x in per_iter[:6]])))
+
+
+def fig9_chunk_size(out):
+    g, bp = _bp(**SMALL)
+    for c in (25, 100, 400):
+        ov, _ = construct_vnm(bp, variant="vnm", chunk_size=c, max_iterations=4)
+        out(BenchResult(f"fig9/VNM/chunk={c}", 0,
+                        dict(si=round(ov.sharing_index(bp.n_edges), 4))))
+    ov, stats = construct_vnm(bp, variant="vnm_a", chunk_size=100, max_iterations=4)
+    out(BenchResult("fig9/VNM_A/adaptive", 0, dict(
+        si=round(ov.sharing_index(bp.n_edges), 4),
+        chunk_schedule=stats.chunk_sizes)))
+
+
+def fig10_time_memory(out):
+    g, bp = _bp(**SMALL)
+    for algo in ("vnm_a", "vnm_n", "vnm_d", "iob"):
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        ov, _ = build_overlay(bp, algo)
+        dt = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        out(BenchResult(f"fig10/{algo}", 0, dict(
+            seconds=round(dt, 2), peak_mb=round(peak / 1e6, 1),
+            si=round(ov.sharing_index(bp.n_edges), 4))))
+
+
+def fig11a_overlay_depth(out):
+    g, bp = _bp(**SMALL)
+    for algo in ("vnm_a", "iob"):
+        ov, _ = build_overlay(bp, algo)
+        depths = np.array(list(ov.depth_per_reader().values()))
+        out(BenchResult(f"fig11a/depth/{algo}", 0, dict(
+            mean=round(float(depths.mean()), 2), max=int(depths.max()))))
+
+
+def fig11b_negative_edges(out):
+    g, bp = _bp(**SMALL)
+    for k1 in (1, 2, 3):
+        ov, _ = construct_vnm(bp, variant="vnm_n", k1=k1, max_iterations=4)
+        neg = sum(1 for ins in ov.in_edges for _, s in ins if s < 0)
+        out(BenchResult(f"fig11b/VNM_N/k1={k1}", 0, dict(
+            si=round(ov.sharing_index(bp.n_edges), 4), neg_edges=neg)))
+
+
+def fig12_pruning(out):
+    g, bp = _bp()
+    ov, _ = build_overlay(bp, "vnm_a")
+    for ratio in (0.1, 1.0, 10.0):
+        tr = generate_trace(bp.writers, np.array(list(bp.reader_inputs)), 1,
+                            write_read_ratio=ratio, n_base=g.n_nodes)
+        _, st = D.decide_mincut(ov, tr.write_freq, tr.read_freq,
+                                D.cost_model_for("sum"))
+        out(BenchResult(f"fig12/pruning/ratio={ratio}", 0, dict(
+            pruned=f"{st.pruned_fraction:.1%}",
+            residual_nodes=st.maxflow_nodes,
+            components=st.n_components,
+            largest=st.largest_component)))
+
+
+def fig13b_dataflow_baselines(out, budget=30_000):
+    for dec in ("all_push", "all_pull", "mincut"):
+        eng, bp, _, _ = make_system(decisions=dec, algorithm="vnm_a", **GRAPH)
+        tput = measure_throughput(eng, bp, n_events=budget)
+        out(BenchResult(f"fig13b/overlay+{dec}", tput,
+                        dict(push=int((eng.plan.decision == 0).sum()),
+                             pull=int((eng.plan.decision == 1).sum()))))
+
+
+def fig13a_adaptivity(out, budget=20_000):
+    eng, bp, g, _ = make_system(algorithm="vnm_a", **GRAPH)
+    readers = np.array(list(bp.reader_inputs))
+    trace = generate_trace(bp.writers, readers, budget, n_base=g.n_nodes)
+    # mid-trace shift: boost reads of the highest-latency (deep pull) readers
+    depths = eng.overlay.depth_per_reader()
+    worst = sorted(depths, key=depths.get)[-200:]
+    worst_base = np.array([eng.overlay.origin[v] for v in worst])
+    shifted = shift_workload(trace, worst_base, factor=20.0)
+    t_static = measure_throughput(eng, bp, n_events=budget, seed=3)
+    # adapt the frontier to the observed (shifted) frequencies
+    dec2, flips = D.adapt_decisions(
+        eng.overlay, eng.plan.decision, shifted.write_freq, shifted.read_freq,
+        D.cost_model_for("sum", window=8))
+    from repro.core.engine import EagrEngine
+    from repro.core.window import WindowSpec
+    eng2 = EagrEngine(eng.overlay, dec2, eng.agg, eng.spec)
+    t_adapted = measure_throughput(eng2, bp, n_events=budget, seed=3)
+    out(BenchResult("fig13a/static-after-shift", t_static, dict()))
+    out(BenchResult("fig13a/adapted", t_adapted, dict(flips=flips)))
+
+
+def fig13c_latency(out):
+    import jax
+    eng, bp, _, _ = make_system(algorithm="vnm_a", **SMALL)
+    readers = np.array(list(bp.reader_inputs))
+    rng = np.random.default_rng(0)
+    eng.write_batch(rng.choice(bp.writers, 1024),
+                    rng.normal(size=1024).astype(np.float32))
+    lats = []
+    for _ in range(200):
+        r = rng.choice(readers, 1)
+        t0 = time.perf_counter()
+        eng.read_batch(r, batch_size=1)
+        lats.append((time.perf_counter() - t0) * 1e6)
+    lats = np.array(lats[20:])
+    out(BenchResult("fig13c/read-latency", 0, dict(
+        p50_us=round(float(np.percentile(lats, 50)), 1),
+        p95_us=round(float(np.percentile(lats, 95)), 1),
+        worst_us=round(float(lats.max()), 1))))
+
+
+def fig14a_throughput(out, budget=20_000):
+    for agg in ("sum", "max", "topk"):
+        for ratio in (0.1, 1.0, 10.0):
+            algo = "vnm_d" if agg == "max" else "vnm_n"
+            eng, bp, _, _ = make_system(aggregate=agg, algorithm=algo,
+                                        write_read_ratio=ratio, **SMALL)
+            tput = measure_throughput(eng, bp, n_events=budget,
+                                      write_read_ratio=ratio)
+            out(BenchResult(f"fig14a/{agg}/wr={ratio}", tput, dict()))
+
+
+def fig14b_node_splitting(out, budget=30_000):
+    for split in (False, True):
+        eng, bp, _, _ = make_system(algorithm="vnm_a", split=split, **GRAPH)
+        tput = measure_throughput(eng, bp, n_events=budget)
+        out(BenchResult(f"fig14b/split={split}", tput,
+                        dict(n_nodes=eng.overlay.n_nodes)))
+
+
+def fig14c_two_hop(out, budget=20_000):
+    for dec in ("all_pull", "all_push", "mincut"):
+        eng, bp, _, _ = make_system(hops=2, decisions=dec, algorithm="vnm_a",
+                                    **SMALL)
+        tput = measure_throughput(eng, bp, n_events=budget)
+        out(BenchResult(f"fig14c/2hop/{dec}", tput,
+                        dict(bip_edges=bp.n_edges)))
+
+
+ALL = [fig8_sharing_index, fig9_chunk_size, fig10_time_memory,
+       fig11a_overlay_depth, fig11b_negative_edges, fig12_pruning,
+       fig13b_dataflow_baselines, fig13a_adaptivity, fig13c_latency,
+       fig14a_throughput, fig14b_node_splitting, fig14c_two_hop]

@@ -1,0 +1,45 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig14a --quick
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None, help="substring filter, e.g. fig12")
+    p.add_argument("--quick", action="store_true",
+                   help="smaller graphs/budgets (CI mode)")
+    args = p.parse_args(argv)
+
+    import benchmarks.paper_figures as F
+
+    if args.quick:
+        F.GRAPH = dict(n_nodes=4_000, n_edges=24_000)
+        F.SMALL = dict(n_nodes=2_000, n_edges=12_000)
+
+    rows = []
+
+    def out(res):
+        rows.append(res)
+        print(res.row(), flush=True)
+
+    t0 = time.time()
+    for fn in F.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        print(f"== {fn.__name__}", flush=True)
+        try:
+            fn(out)
+        except Exception as e:  # keep the harness going; report at the end
+            print(f"{fn.__name__},FAILED,{type(e).__name__}: {e}", flush=True)
+    print(f"\n{len(rows)} rows in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

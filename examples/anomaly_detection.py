@@ -1,0 +1,59 @@
+"""Continuous anomaly detection on a communication network (paper §1): keep
+every node's ego-centric COUNT of recent calls up to date as events stream
+in (a *continuous* query — all-push), and flag neighborhoods whose activity
+exceeds a z-score threshold. Includes an adaptive-dataflow phase change.
+
+    PYTHONPATH=src python examples/anomaly_detection.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.engine import EagrEngine
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+
+WINDOW = 32
+
+graph = rmat_graph(2000, 16000, seed=3)
+bp = build_bipartite(graph)
+overlay, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+
+# continuous query => results must always be fresh => all-push decisions
+dec = np.full(overlay.n_nodes, D.PUSH)
+engine = EagrEngine(overlay, dec, make_aggregate("count"),
+                    WindowSpec("tuple", WINDOW))
+
+rng = np.random.default_rng(0)
+readers = np.array(list(bp.reader_inputs))
+
+# ---- phase 1: normal traffic establishes each node's OWN baseline
+# (ego-network sizes are power-law; a global z-score would be blind)
+for _ in range(12):
+    ids = rng.choice(bp.writers, 512)
+    engine.write_batch(ids, np.ones(512, np.float32))
+base = np.ravel(engine.read_batch(readers))
+print(f"baseline ego-activity: mean={base.mean():.1f} max={base.max():.0f}")
+
+# ---- phase 2: a hot cluster floods calls (their windows saturate at cap)
+hot = rng.choice(bp.writers, 12, replace=False)
+for _ in range(12):
+    ids = np.concatenate([rng.choice(hot, 480), rng.choice(bp.writers, 32)])
+    engine.write_batch(ids, np.ones(512, np.float32))
+act = np.ravel(engine.read_batch(readers))
+# per-node Poisson-style deviation score against its own baseline
+score = (act - base) / np.sqrt(base + 1.0)
+flagged = readers[score > 4.0]
+ris = bp.reader_input_sets()
+truly_hot = [r for r in flagged if set(map(int, hot)) & ris[int(r)]]
+print(f"flagged {len(flagged)} anomalous neighborhoods "
+      f"(score > 4); {len(truly_hot)} contain a flooding caller")
+assert len(flagged) > 0 and len(truly_hot) / max(1, len(flagged)) > 0.9
+print("PASS: anomaly neighborhoods localize the hot cluster")

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-parameter GQA transformer for a few
+hundred steps with the full production stack (remat scan, fused CE, gradient
+accumulation, AdamW, checkpoint/restart with an injected node failure).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault import FaultTolerantRunner
+from repro.models import transformer as T
+from repro.models.common import init_from_specs
+from repro.train.optimizer import adamw
+from repro.train.trainer import make_train_step
+
+p = argparse.ArgumentParser()
+p.add_argument("--steps", type=int, default=300)
+p.add_argument("--batch", type=int, default=4)
+p.add_argument("--seq", type=int, default=128)
+args = p.parse_args()
+
+# ~103M params: 12L x d512 (8 heads, GQA kv=4, ffn 2048, 32k vocab)
+cfg = T.TransformerConfig(
+    name="lm-100m", n_layers=12, d_model=512, n_heads=8, n_kv_heads=4,
+    d_ff=2048, vocab=32000, head_dim=64, compute_dtype=jnp.float32)
+specs = T.param_specs(cfg)
+n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+    specs, is_leaf=lambda x: hasattr(x, "shape")))
+print(f"model: {n_params/1e6:.0f}M params")
+
+params = init_from_specs(specs, jax.random.PRNGKey(0))
+opt = adamw(weight_decay=0.01)
+step = jax.jit(make_train_step(
+    lambda p_, b: T.loss_fn(p_, b, cfg), opt, accum_steps=2))
+
+
+def make_batch(i):
+    """Synthetic language: next token = (3 * tok + noise) % vocab — gives the
+    model a learnable structure so the loss visibly drops below ln(V)."""
+    key = jax.random.PRNGKey(i)
+    toks = [jax.random.randint(key, (args.batch, 1), 0, cfg.vocab)]
+    for t in range(args.seq):
+        k = jax.random.fold_in(key, t)
+        nxt = (3 * toks[-1] + jax.random.randint(k, toks[-1].shape, 0, 17)) % cfg.vocab
+        toks.append(nxt)
+    seq = jnp.concatenate(toks, axis=1)
+    return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def step_fn(state, batch):
+    params_, opt_state_ = state
+    params_, opt_state_, metrics = step(params_, opt_state_, batch,
+                                        jnp.float32(3e-4))
+    return (params_, opt_state_), metrics
+
+
+ckpt = CheckpointManager("/tmp/repro_lm_ckpt", keep=2)
+runner = FaultTolerantRunner(step_fn, make_batch, ckpt, ckpt_every=100)
+t0 = time.time()
+state, report = runner.run((params, opt.init(params)), args.steps,
+                           fail_at={args.steps // 2})  # injected node failure
+dt = time.time() - t0
+
+losses = report.losses
+k = max(1, len(losses) // 8)
+curve = [round(float(np.mean(losses[i:i + k])), 3)
+         for i in range(0, len(losses), k)]
+print(f"{report.steps_run} steps in {dt:.0f}s "
+      f"({report.steps_run / dt:.2f} steps/s), restarts={report.restarts}")
+print(f"loss: {curve} (ln V = {np.log(cfg.vocab):.2f})")
+assert report.restarts == 1, "the injected failure must trigger one restart"
+if args.steps >= 100:   # shorter runs are for timing only
+    assert losses[-1] < losses[0] - 0.5, "loss must decrease"
+print("PASS: trained through a node failure with checkpoint/restart")

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_arch(arch_id)`` -> ArchSpec.
+
+One module per assigned architecture (exact public-literature config) plus the
+paper's own EAGr system config. Every arch exposes the same CellPlan interface
+consumed by launch/dryrun.py, launch/train.py and the smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "graphcast": "repro.configs.graphcast",
+    "gat-cora": "repro.configs.gat_cora",
+    "nequip": "repro.configs.nequip",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "dien": "repro.configs.dien",
+    "eagr": "repro.configs.eagr",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "eagr"]  # the 10 assigned archs
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch, shape) dry-run cells."""
+    cells = []
+    for a in ARCH_IDS:
+        arch = get_arch(a)
+        cells.extend((a, s) for s in arch.shapes)
+    return cells

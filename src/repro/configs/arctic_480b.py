@@ -1,0 +1,21 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base]: dense-MoE hybrid.
+35L d_model=7168 56H (kv=8) d_ff=4864(dense residual) vocab=32000,
+MoE 128 experts top-2 (expert d_ff=4864) + dense residual path;
+head_dim = 7168/56 = 128.
+
+480B params => bf16 params + Adafactor + 'sort' (dropless) MoE dispatch: the
+GShard one-hot dispatch einsum would materialize a (B,S,E,C) tensor measured
+in terabytes at this scale (DESIGN.md 'MoE dispatch' note).
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, make_arch
+from repro.models.transformer import TransformerConfig
+
+ARCH = make_arch("arctic-480b", LMArch(
+    cfg=TransformerConfig(
+        name="arctic-480b", n_layers=35, d_model=7168, n_heads=56,
+        n_kv_heads=8, d_ff=4864, vocab=32000, head_dim=128,
+        n_experts=128, top_k=2, moe_dense_residual=True, moe_impl="sort",
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16),
+    optimizer="adafactor", accum=8, lr=1e-4, train_rules="residual_sp"))

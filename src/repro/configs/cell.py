@@ -1,0 +1,125 @@
+"""CellPlan: the uniform (arch x shape) contract consumed by the dry-run,
+launchers and smoke tests.
+
+``ArchSpec.build(shape, mesh=...)`` returns a CellPlan whose ``fn`` is jitted
+with the plan's shardings and lowered against ShapeDtypeStruct args — no
+device allocation ever happens for the full configs. ``ArchSpec.build_smoke()``
+returns a reduced-config plan with *real* (tiny) arrays for CPU execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    param_shardings,
+    replicated,
+    sharding_for,
+)
+from repro.models.common import ParamSpec, spec_to_sds
+from repro.train.optimizer import AdamState, FactorState, Optimizer
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape: str
+    fn: Callable                     # positional args
+    args: tuple                      # SDS trees (dry-run) or arrays (smoke)
+    in_shardings: tuple | None       # pytree matching args (None for smoke)
+    out_shardings: Any = None
+    donate: tuple[int, ...] = ()
+    kind: str = "train"              # 'train' | 'serve'
+    rules: Any = None                # logical->mesh rules for constrain()
+    notes: str = ""
+
+    def lower(self, mesh):
+        from repro.distributed.sharding import activation_sharding
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate,
+        )
+        # tracing happens inside .lower(), so the activation-constraint context
+        # must be active around it
+        with mesh, activation_sharding(mesh, self.rules):
+            return jitted.lower(*self.args)
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str
+    shapes: tuple[str, ...]
+    build: Callable[..., CellPlan]          # build(shape, mesh, rules=None)
+    build_smoke: Callable[..., CellPlan]    # build_smoke(shape)
+    describe: str = ""
+
+
+# ------------------------------------------------------------------- helpers
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def tree_sharding(axes_tree, sds_tree, mesh, rules=None):
+    """axes tree (tuples of logical names, structure-matching sds tree) ->
+    NamedSharding tree."""
+    return jax.tree.map(
+        lambda ax, s: sharding_for(s.shape, ax, mesh, rules),
+        axes_tree, sds_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def opt_state_specs(opt: Optimizer, spec_tree) -> Any:
+    """ParamSpec tree for the optimizer state (mirrors optimizer.init)."""
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    if opt.name == "adamw":
+        st = lambda s: ParamSpec(s.shape, s.axes, jnp.float32)
+        return AdamState(
+            mu=jax.tree.map(st, spec_tree, is_leaf=is_spec),
+            nu=jax.tree.map(st, spec_tree, is_leaf=is_spec),
+            count=ParamSpec((), (), jnp.int32),
+        )
+    if opt.name == "adafactor":
+        def vr(s):
+            if len(s.shape) >= 2:
+                return ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32)
+            return ParamSpec(s.shape, s.axes, jnp.float32)
+
+        def vc(s):
+            if len(s.shape) >= 2:
+                return ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                 s.axes[:-2] + s.axes[-1:], jnp.float32)
+            return ParamSpec((1,), (None,), jnp.float32)
+
+        return FactorState(
+            vr=jax.tree.map(vr, spec_tree, is_leaf=is_spec),
+            vc=jax.tree.map(vc, spec_tree, is_leaf=is_spec),
+            count=ParamSpec((), (), jnp.int32),
+        )
+    if opt.name == "sgd":
+        return jax.tree.map(lambda s: ParamSpec(s.shape, s.axes, jnp.float32),
+                            spec_tree, is_leaf=is_spec)
+    raise ValueError(opt.name)
+
+
+def state_and_shardings(opt: Optimizer, spec_tree, mesh, rules=None):
+    """(params_sds, opt_sds, params_sh, opt_sh) for the dry-run."""
+    o_specs = opt_state_specs(opt, spec_tree)
+    return (
+        spec_to_sds(spec_tree),
+        spec_to_sds(o_specs),
+        param_shardings(spec_tree, mesh, rules),
+        param_shardings(o_specs, mesh, rules),
+    )
+
+
+def scalar_sharding(mesh):
+    return replicated(mesh)

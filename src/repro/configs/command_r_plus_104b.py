@@ -1,0 +1,20 @@
+"""command-r-plus-104b [hf:CohereForAI/c4ai-command-r-v01 family]: dense GQA
+LM, no biases. 64L d_model=12288 96H (kv=8) d_ff=33792 vocab=256000;
+head_dim = 12288/96 = 128.
+
+104B params: Adafactor (factored second moment) + bf16 params + microbatched
+gradient accumulation keep the per-chip HBM budget (see DESIGN.md memory
+table); fp32 Adam states alone would need ~3.3 GB/chip more than fits
+alongside activations on a 16 GB v5e chip.
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, make_arch
+from repro.models.transformer import TransformerConfig
+
+ARCH = make_arch("command-r-plus-104b", LMArch(
+    cfg=TransformerConfig(
+        name="command-r-plus-104b", n_layers=64, d_model=12288, n_heads=96,
+        n_kv_heads=8, d_ff=33792, vocab=256000, head_dim=128,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16),
+    optimizer="adafactor", accum=4, lr=1e-4, train_rules="residual_sp"))

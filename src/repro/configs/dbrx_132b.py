@@ -1,0 +1,15 @@
+"""dbrx-132b [hf:databricks/dbrx-base]: fine-grained MoE.
+40L d_model=6144 48H (kv=8) d_ff=10752, 16 experts top-4 vocab=100352;
+head_dim = 6144/48 = 128. bf16 + Adafactor + sort dispatch (see arctic)."""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, make_arch
+from repro.models.transformer import TransformerConfig
+
+ARCH = make_arch("dbrx-132b", LMArch(
+    cfg=TransformerConfig(
+        name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_ff=10752, vocab=100352, head_dim=128,
+        n_experts=16, top_k=4, moe_impl="sort",
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16),
+    optimizer="adafactor", accum=8, lr=1e-4))

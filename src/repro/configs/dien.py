@@ -1,0 +1,152 @@
+"""dien [arXiv:1809.03672]: embed_dim=18, seq_len=100, gru_dim=108,
+MLP 200-80, AUGRU interaction. 1M-item / 1k-category embedding tables
+(row-sharded over model — the EAGr reader-partitioning analogue), 100k-feature
+multi-hot profile EmbeddingBag.
+
+Shapes:
+  train_batch     batch=65,536   train_step (CTR + DIEN auxiliary loss)
+  serve_p99       batch=512      online CTR scoring
+  serve_bulk      batch=262,144  offline scoring
+  retrieval_cand  batch=1, n_candidates=1,000,000  two-tower retrieval scoring
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cell import ArchSpec, CellPlan, sds, state_and_shardings
+from repro.distributed.sharding import param_shardings, replicated, sharding_for
+from repro.models.common import init_from_specs, spec_to_sds
+from repro.models.recsys import dien as m
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+CFG = m.DIENConfig()
+SMOKE_CFG = m.DIENConfig(n_items=1000, n_cats=20, n_profile_feats=100,
+                         seq_len=12, profile_bag_size=8)
+
+DIEN_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+SHAPE_DEFS = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_cand=1_000_000, kind="retrieval"),
+}
+
+
+def _rank_batch_sds(cfg, B, *, train):
+    S, nb = cfg.seq_len, cfg.profile_bag_size
+    i32, b_ = jnp.int32, jnp.bool_
+    batch = dict(
+        item_ids=sds((B, S), i32), cat_ids=sds((B, S), i32),
+        mask=sds((B, S), b_),
+        target_item=sds((B,), i32), target_cat=sds((B,), i32),
+        profile_ids=sds((B, nb), i32), profile_mask=sds((B, nb), b_))
+    if train:
+        batch |= dict(labels=sds((B,), i32),
+                      neg_item_ids=sds((B, S), i32), neg_cat_ids=sds((B, S), i32))
+    return batch
+
+
+def _batch_shardings(b_sds, mesh, rules):
+    return {k: sharding_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1),
+                            mesh, rules) for k, v in b_sds.items()}
+
+
+def _build(shape, mesh, rules=None, unroll=False):
+    d = SHAPE_DEFS[shape]
+    cfg = dataclasses.replace(CFG, scan_unroll=CFG.seq_len) if unroll else CFG
+    opt = get_optimizer("adamw")
+    specs = m.param_specs(cfg)
+    if d["kind"] == "train":
+        p_sds, o_sds, p_sh, o_sh = state_and_shardings(opt, specs, mesh, rules)
+        b_sds = _rank_batch_sds(cfg, d["batch"], train=True)
+        b_sh = _batch_shardings(b_sds, mesh, rules)
+        step = make_train_step(functools.partial(m.loss_fn, cfg=cfg), opt)
+        return CellPlan("dien", shape, step,
+                        args=(p_sds, o_sds, b_sds, sds((), jnp.float32)),
+                        in_shardings=(p_sh, o_sh, b_sh, replicated(mesh)),
+                        out_shardings=(p_sh, o_sh, None),
+                        donate=(0, 1), kind="train", rules=rules)
+    p_sds = spec_to_sds(specs)
+    p_sh = param_shardings(specs, mesh, rules)
+    if d["kind"] == "serve":
+        b_sds = _rank_batch_sds(cfg, d["batch"], train=False)
+        b_sh = _batch_shardings(b_sds, mesh, rules)
+        fn = functools.partial(_serve_fn, cfg=cfg)
+        out_sh = sharding_for((d["batch"],), ("batch",), mesh, rules)
+        return CellPlan("dien", shape, fn, args=(p_sds, b_sds),
+                        in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+                        kind="serve", rules=rules)
+    # retrieval: one user, 1M candidates sharded over every mesh axis
+    b_sds = _rank_batch_sds(cfg, 1, train=False)
+    b_sds.pop("target_item"), b_sds.pop("target_cat")
+    b_sds |= dict(cand_items=sds((d["n_cand"],), jnp.int32),
+                  cand_cats=sds((d["n_cand"],), jnp.int32))
+    b_sh = {k: sharding_for(
+        v.shape,
+        (("candidates",) if k.startswith("cand") else
+         ("batch",) + (None,) * (len(v.shape) - 1)), mesh, rules)
+        for k, v in b_sds.items()}
+    fn = functools.partial(_retrieval_fn, cfg=cfg)
+    out_sh = sharding_for((d["n_cand"],), ("candidates",), mesh, rules)
+    return CellPlan("dien", shape, fn, args=(p_sds, b_sds),
+                    in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+                    kind="serve", rules=rules)
+
+
+def _serve_fn(params, batch, cfg):
+    return m.serve(params, batch, cfg)
+
+
+def _retrieval_fn(params, batch, cfg):
+    return m.retrieval_score(params, batch, cfg)
+
+
+def _rand_rank_batch(key, cfg, B, *, train):
+    S, nb = cfg.seq_len, cfg.profile_bag_size
+    ks = jax.random.split(key, 10)
+    batch = dict(
+        item_ids=jax.random.randint(ks[0], (B, S), 0, cfg.n_items),
+        cat_ids=jax.random.randint(ks[1], (B, S), 0, cfg.n_cats),
+        mask=jax.random.bernoulli(ks[2], 0.9, (B, S)),
+        target_item=jax.random.randint(ks[3], (B,), 0, cfg.n_items),
+        target_cat=jax.random.randint(ks[4], (B,), 0, cfg.n_cats),
+        profile_ids=jax.random.randint(ks[5], (B, nb), 0, cfg.n_profile_feats),
+        profile_mask=jnp.ones((B, nb), jnp.bool_))
+    if train:
+        batch |= dict(labels=jax.random.randint(ks[6], (B,), 0, 2),
+                      neg_item_ids=jax.random.randint(ks[7], (B, S), 0, cfg.n_items),
+                      neg_cat_ids=jax.random.randint(ks[8], (B, S), 0, cfg.n_cats))
+    return batch
+
+
+def _build_smoke(shape):
+    cfg = SMOKE_CFG
+    d = SHAPE_DEFS[shape]
+    opt = get_optimizer("adamw")
+    params = init_from_specs(m.param_specs(cfg), jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    if d["kind"] == "train":
+        batch = _rand_rank_batch(key, cfg, 8, train=True)
+        step = make_train_step(functools.partial(m.loss_fn, cfg=cfg), opt)
+        return CellPlan("dien", shape, step,
+                        (params, opt.init(params), batch, jnp.float32(1e-3)),
+                        None, kind="train")
+    if d["kind"] == "serve":
+        batch = _rand_rank_batch(key, cfg, 8, train=False)
+        return CellPlan("dien", shape, functools.partial(_serve_fn, cfg=cfg),
+                        (params, batch), None, kind="serve")
+    batch = _rand_rank_batch(key, cfg, 1, train=False)
+    batch.pop("target_item"), batch.pop("target_cat")
+    batch |= dict(cand_items=jax.random.randint(key, (512,), 0, cfg.n_items),
+                  cand_cats=jax.random.randint(key, (512,), 0, cfg.n_cats))
+    return CellPlan("dien", shape, functools.partial(_retrieval_fn, cfg=cfg),
+                    (params, batch), None, kind="serve")
+
+
+ARCH = ArchSpec(arch_id="dien", family="recsys", shapes=DIEN_SHAPES,
+                build=_build, build_smoke=_build_smoke)

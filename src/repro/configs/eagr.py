@@ -1,0 +1,116 @@
+"""The paper's own system config: EAGr continuous ego-centric aggregation.
+
+Not one of the 40 assigned dry-run cells — this is the reference config used
+by the paper-validation benchmarks, the examples, and a bonus dry-run cell
+that lowers the vectorized write/read step of a compiled overlay on the
+production mesh (batch dims sharded over (pod, data); the overlay plan is a
+compile-time constant exactly as the paper's pre-compiled overlay is).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cell import ArchSpec, CellPlan, sds
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.engine import EagrEngine, _read_body, _write_body_sum
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec, init_windows
+from repro.distributed.sharding import sharding_for
+from repro.graphs.generators import rmat_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class EagrSystemConfig:
+    n_nodes: int = 100_000
+    n_edges: int = 800_000
+    aggregate: str = "sum"
+    window: int = 8
+    algorithm: str = "vnm_n"          # overlay construction algorithm
+    write_batch: int = 4096
+    read_batch: int = 4096
+    write_read_ratio: float = 1.0
+    zipf_a: float = 1.5
+    seed: int = 0
+
+
+CFG = EagrSystemConfig()
+SMOKE_CFG = EagrSystemConfig(n_nodes=400, n_edges=2400, write_batch=128,
+                             read_batch=128)
+
+EAGR_SHAPES = ("stream_mixed",)
+
+
+def build_engine(cfg: EagrSystemConfig):
+    """Host compile phase: graph -> bipartite -> overlay -> dataflow -> engine."""
+    g = rmat_graph(cfg.n_nodes, cfg.n_edges, seed=cfg.seed)
+    bp = build_bipartite(g)
+    ov, stats = construct_vnm(bp, variant=cfg.algorithm, max_iterations=4,
+                              seed=cfg.seed)
+    rng = np.random.default_rng(cfg.seed)
+    wf = rng.zipf(cfg.zipf_a, g.n_nodes).clip(1, 10_000).astype(np.float64)
+    rf = (wf * cfg.write_read_ratio)[rng.permutation(g.n_nodes)]
+    cm = D.cost_model_for(cfg.aggregate, window=cfg.window)
+    dec, dstats = D.decide_mincut(ov, wf, rf, cm, window=cfg.window)
+    ov, dec, _ = D.split_nodes(ov, dec, wf, rf, cm, window=cfg.window)
+    agg = make_aggregate(cfg.aggregate)
+    eng = EagrEngine(ov, dec, agg, WindowSpec(kind="tuple", size=cfg.window))
+    return eng, bp, (stats, dstats)
+
+
+def _build(shape, mesh, rules=None, unroll=False):
+    cfg = CFG
+    eng, bp, _ = build_engine(cfg)
+    B = cfg.write_batch
+
+    # lower the raw step bodies with batch args sharded over (pod, data)
+    write_fn = functools.partial(_write_body_sum, eng.plan, eng.agg, eng.spec)
+    read_fn = functools.partial(_read_body, eng.plan, eng.agg)
+
+    def mixed(state, rows, vals, wmask, rnodes, rmask):
+        state = write_fn(state, rows, vals, wmask)
+        ans, _ = read_fn(state, rnodes, rmask)
+        return state, ans
+
+    st = eng.state
+    st_sds = jax.tree.map(lambda x: sds(x.shape, x.dtype), st)
+    vec = lambda n, dt: sds((n,), dt)
+    bsh = sharding_for((B,), ("batch",), mesh, rules)
+    rep = sharding_for((), (), mesh, rules)
+    st_sh = jax.tree.map(lambda x: rep, st_sds)  # PAO state replicated per pod
+    return CellPlan(
+        arch_id="eagr", shape=shape, fn=mixed,
+        args=(st_sds, vec(B, jnp.int32), vec(B, jnp.float32), vec(B, jnp.bool_),
+              vec(cfg.read_batch, jnp.int32), vec(cfg.read_batch, jnp.bool_)),
+        in_shardings=(st_sh, bsh, bsh, bsh, bsh, bsh),
+        out_shardings=None, kind="serve", rules=rules,
+        notes="bonus cell: EAGr engine step (overlay = compile-time constant)")
+
+
+def _build_smoke(shape):
+    cfg = SMOKE_CFG
+    eng, bp, _ = build_engine(cfg)
+    rng = np.random.default_rng(1)
+    writers = bp.writers
+    readers = list(bp.reader_inputs.keys())
+    ids = rng.choice(writers, cfg.write_batch)
+    vals = rng.normal(size=cfg.write_batch).astype(np.float32)
+
+    def run():
+        eng.write_batch(ids, vals)
+        q = rng.choice(readers, cfg.read_batch)
+        return eng.read_batch(q)
+
+    return CellPlan("eagr", shape, lambda: jnp.asarray(run()), (), None,
+                    kind="serve")
+
+
+ARCH = ArchSpec(arch_id="eagr", family="graph-streams", shapes=EAGR_SHAPES,
+                build=_build, build_smoke=_build_smoke,
+                describe="the paper's system (reference implementation)")

@@ -1,0 +1,20 @@
+"""gat-cora [arXiv:1710.10903]: 2 layers, 8 hidden per head, 8 heads, attn
+aggregator — the paper-exact Cora config, scaled to each assigned shape's
+feature/class counts."""
+import dataclasses
+
+from repro.configs.gnn_common import make_gnn_arch
+from repro.models.gnn import gat
+
+
+def _mk(d, graph_task):
+    return gat.GATConfig(
+        name="gat-cora", n_layers=2, d_hidden=8, n_heads=8,
+        d_in=d["d_feat"], n_classes=d["classes"],
+        task="graph" if graph_task else "node")
+
+
+ARCH = make_gnn_arch(
+    "gat-cora",
+    make_cfg=_mk, param_specs=gat.param_specs, loss_fn=gat.loss_fn,
+    make_smoke_cfg=_mk)

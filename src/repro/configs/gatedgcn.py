@@ -1,0 +1,22 @@
+"""gatedgcn [arXiv:2003.00982]: 16 layers, d_hidden=70, gated aggregator."""
+from repro.configs.gnn_common import make_gnn_arch
+from repro.models.gnn import gatedgcn as m
+
+
+def _mk(d, graph_task):
+    return m.GatedGCNConfig(
+        name="gatedgcn", n_layers=16, d_hidden=70,
+        d_in=d["d_feat"], n_classes=d["classes"],
+        task="graph" if graph_task else "node")
+
+
+def _mk_smoke(d, graph_task):
+    cfg = _mk(d, graph_task)
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=3, d_hidden=24)
+
+
+ARCH = make_gnn_arch(
+    "gatedgcn",
+    make_cfg=_mk, param_specs=m.param_specs, loss_fn=m.loss_fn,
+    make_smoke_cfg=_mk_smoke)

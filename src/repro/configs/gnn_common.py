@@ -1,0 +1,162 @@
+"""Shared cell builders for the four GNN architectures.
+
+Shapes (assigned):
+  full_graph_sm   n_nodes=2,708 n_edges=10,556 d_feat=1,433   (Cora full-batch)
+  minibatch_lg    n_nodes=232,965 n_edges=114,615,892,
+                  batch_nodes=1,024, fanout 15-10             (Reddit sampled)
+  ogb_products    n_nodes=2,449,029 n_edges=61,859,140 d_feat=100
+  molecule        n_nodes=30 n_edges=64 batch=128             (small graphs)
+
+minibatch_lg lowers the *sampled union subgraph* produced by
+graphs/sampler.py (GraphSAINT-style: all fanout layers merged into one padded
+subgraph so arbitrary-depth models train on it; the sampler itself is the
+real neighbor sampler, exercised in tests and examples).
+
+All cells lower a full train_step (fwd + bwd + optimizer). Node/edge arrays
+shard over (pod, data); model params are small enough to replicate except
+GraphCast's d=512 MLPs (mlp -> model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cell import ArchSpec, CellPlan, sds, state_and_shardings
+from repro.distributed.sharding import replicated, sharding_for
+from repro.models.common import init_from_specs
+from repro.models.gnn.common import GraphBatch
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+
+
+def pad512(x: int) -> int:
+    """Pad node/edge counts to a multiple of 512 so every mesh-axis
+    combination divides evenly (2,449,029 nodes shards over nothing;
+    2,449,408 shards over all of pod*data*model). Padded slots are masked."""
+    return -(-x // 512) * 512
+
+# minibatch union-subgraph sizes: seeds + 15 + 15*10 per seed
+_MB_NODES = 1024 * (1 + 15 + 150)
+_MB_EDGES = 1024 * (15 + 150)
+
+SHAPE_DEFS = {
+    "full_graph_sm": dict(n=2708, e=10556, d_feat=1433, classes=7, graphs=0),
+    "minibatch_lg": dict(n=_MB_NODES, e=_MB_EDGES, d_feat=602, classes=41, graphs=0),
+    "ogb_products": dict(n=2449029, e=61859140, d_feat=100, classes=47, graphs=0),
+    "molecule": dict(n=30 * 128, e=64 * 128, d_feat=16, classes=2, graphs=128),
+}
+
+_BATCH_AXES = dict(
+    x=("nodes", None), edge_src=("edges",), edge_dst=("edges",),
+    edge_mask=("edges",), node_mask=("nodes",), labels=("nodes",),
+    label_mask=("nodes",), graph_ids=("nodes",),
+    positions=("nodes", None), species=("nodes",),
+)
+
+
+def graph_batch_sds(d: dict, *, geometric: bool = False,
+                    graph_task: bool = False) -> GraphBatch:
+    n, e, g = pad512(d["n"]), pad512(d["e"]), d["graphs"]
+    lbl_n = g if graph_task and g else n
+    return GraphBatch(
+        x=sds((n, d["d_feat"])),
+        edge_src=sds((e,), jnp.int32), edge_dst=sds((e,), jnp.int32),
+        edge_mask=sds((e,), jnp.bool_), node_mask=sds((n,), jnp.bool_),
+        labels=sds((lbl_n,), jnp.int32), label_mask=sds((lbl_n,), jnp.bool_),
+        graph_ids=sds((n,), jnp.int32) if g else None,
+        n_graphs=max(g, 1),
+        positions=sds((n, 3)) if geometric else None,
+        species=sds((n,), jnp.int32) if geometric else None,
+    )
+
+
+def graph_batch_shardings(b: GraphBatch, mesh, rules, *, graph_task=False):
+    def shard(name, v):
+        if v is None:
+            return None
+        axes = _BATCH_AXES[name]
+        if name in ("labels", "label_mask") and graph_task:
+            axes = ("batch",) + axes[1:]
+        return sharding_for(v.shape, axes, mesh, rules)
+    return GraphBatch(
+        **{f.name: (shard(f.name, getattr(b, f.name))
+                    if f.name != "n_graphs" else b.n_graphs)
+           for f in dataclasses.fields(GraphBatch)})
+
+
+def random_graph_batch(key, n, e, d_feat, classes, *, graphs=0,
+                       geometric=False, graph_task=False) -> GraphBatch:
+    ks = jax.random.split(key, 8)
+    lbl_n = graphs if graph_task and graphs else n
+    if graphs:
+        per = n // graphs
+        gid = jnp.repeat(jnp.arange(graphs, dtype=jnp.int32), per)
+        # edges stay within their graph
+        base = jax.random.randint(ks[0], (e,), 0, per)
+        off = jnp.repeat(jnp.arange(graphs, dtype=jnp.int32), e // graphs) * per
+        esrc = (base + off).astype(jnp.int32)
+        edst = (jax.random.randint(ks[1], (e,), 0, per) + off).astype(jnp.int32)
+    else:
+        gid = None
+        esrc = jax.random.randint(ks[0], (e,), 0, n).astype(jnp.int32)
+        edst = jax.random.randint(ks[1], (e,), 0, n).astype(jnp.int32)
+    return GraphBatch(
+        x=jax.random.normal(ks[2], (n, d_feat)),
+        edge_src=esrc, edge_dst=edst,
+        edge_mask=jnp.ones((e,), jnp.bool_), node_mask=jnp.ones((n,), jnp.bool_),
+        labels=jax.random.randint(ks[3], (lbl_n,), 0, classes),
+        label_mask=jnp.ones((lbl_n,), jnp.bool_),
+        graph_ids=gid, n_graphs=max(graphs, 1),
+        positions=jax.random.normal(ks[4], (n, 3)) * 2.0 if geometric else None,
+        species=jax.random.randint(ks[5], (n,), 0, 10) if geometric else None,
+    )
+
+
+def make_gnn_arch(arch_id: str, *, make_cfg, param_specs, loss_fn,
+                  make_smoke_cfg, optimizer="adamw", lr=1e-3,
+                  geometric=False) -> ArchSpec:
+    """Generic ArchSpec factory for GraphBatch-based GNNs (gat, gatedgcn)."""
+
+    def build(shape, mesh, rules=None, unroll=False):
+        d = SHAPE_DEFS[shape]
+        graph_task = shape == "molecule"
+        cfg = make_cfg(d, graph_task)
+        if unroll and hasattr(cfg, "scan_unroll"):
+            cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_layers)
+        opt = get_optimizer(optimizer)
+        specs = param_specs(cfg)
+        p_sds, o_sds, p_sh, o_sh = state_and_shardings(opt, specs, mesh, rules)
+        b_sds = graph_batch_sds(d, geometric=geometric, graph_task=graph_task)
+        b_sh = graph_batch_shardings(b_sds, mesh, rules, graph_task=graph_task)
+        step = make_train_step(functools.partial(loss_fn, cfg=cfg), opt)
+        return CellPlan(
+            arch_id=arch_id, shape=shape, fn=step,
+            args=(p_sds, o_sds, b_sds, sds((), jnp.float32)),
+            in_shardings=(p_sh, o_sh, b_sh, replicated(mesh)),
+            out_shardings=(p_sh, o_sh, None),
+            donate=(0, 1), kind="train", rules=rules)
+
+    def build_smoke(shape):
+        d = dict(SHAPE_DEFS[shape])
+        d.update(n=min(d["n"], 64), e=min(d["e"], 256),
+                 d_feat=min(d["d_feat"], 24), graphs=min(d["graphs"], 4))
+        graph_task = shape == "molecule"
+        cfg = make_smoke_cfg(d, graph_task)
+        opt = get_optimizer(optimizer)
+        params = init_from_specs(param_specs(cfg), jax.random.PRNGKey(0))
+        batch = random_graph_batch(
+            jax.random.PRNGKey(1), d["n"], d["e"], d["d_feat"], d["classes"],
+            graphs=d["graphs"], geometric=geometric, graph_task=graph_task)
+        step = make_train_step(functools.partial(loss_fn, cfg=cfg), opt)
+        return CellPlan(arch_id, shape, step,
+                        (params, opt.init(params), batch, jnp.float32(lr)),
+                        None, kind="train")
+
+    return ArchSpec(arch_id=arch_id, family="gnn", shapes=GNN_SHAPES,
+                    build=build, build_smoke=build_smoke)

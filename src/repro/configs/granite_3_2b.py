@@ -1,0 +1,13 @@
+"""granite-3-2b [hf:ibm-granite/granite-3.0-2b-base]: dense GQA LM.
+40L d_model=2048 32H (kv=8) d_ff=8192 vocab=49155; head_dim = 2048/32 = 64."""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, make_arch
+from repro.models.transformer import TransformerConfig
+
+ARCH = make_arch("granite-3-2b", LMArch(
+    cfg=TransformerConfig(
+        name="granite-3-2b", n_layers=40, d_model=2048, n_heads=32,
+        n_kv_heads=8, d_ff=8192, vocab=49155, head_dim=64,
+        param_dtype=jnp.float32, compute_dtype=jnp.bfloat16),
+    optimizer="adamw", accum=4))

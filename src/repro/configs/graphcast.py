@@ -1,0 +1,101 @@
+"""graphcast [arXiv:2212.12794]: 16-layer encoder-processor-decoder mesh GNN,
+d_hidden=512, mesh_refinement=6 (40,962 mesh nodes / 327,660 directed
+multimesh edges — static constants of the refinement), n_vars=227.
+
+The assigned shape's n_nodes plays the grid; grid<->mesh edges are ~4 per
+grid node (data arrays, ShapeDtypeStruct in the dry-run)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cell import ArchSpec, CellPlan, sds, state_and_shardings
+from repro.configs.gnn_common import GNN_SHAPES, SHAPE_DEFS, pad512
+from repro.distributed.sharding import replicated, sharding_for
+from repro.models.common import init_from_specs
+from repro.models.gnn import graphcast as m
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+CFG = m.GraphCastConfig(name="graphcast", n_layers=16, d_hidden=512,
+                        mesh_refinement=6, n_vars=227)
+SMOKE_CFG = m.GraphCastConfig(name="graphcast", n_layers=2, d_hidden=32,
+                              mesh_refinement=1, n_vars=8,
+                              compute_dtype=jnp.float32)
+
+_AXES = m.GraphCastBatch(
+    grid_x=("nodes", None), g2m_src=("edges",), g2m_dst=("edges",),
+    mesh_src=("edges",), mesh_dst=("edges",), m2g_src=("edges",),
+    m2g_dst=("edges",), targets=("nodes", None), grid_mask=("nodes",),
+    n_mesh=0)
+
+
+def _batch_sds(cfg: m.GraphCastConfig, n_grid: int) -> m.GraphCastBatch:
+    n_grid = pad512(n_grid)
+    e_gm = pad512(4 * n_grid)
+    e_mesh = pad512(cfg.n_mesh_edges)
+    i32 = jnp.int32
+    return m.GraphCastBatch(
+        grid_x=sds((n_grid, cfg.n_vars)),
+        g2m_src=sds((e_gm,), i32), g2m_dst=sds((e_gm,), i32),
+        mesh_src=sds((e_mesh,), i32), mesh_dst=sds((e_mesh,), i32),
+        m2g_src=sds((e_gm,), i32), m2g_dst=sds((e_gm,), i32),
+        targets=sds((n_grid, cfg.n_vars)),
+        grid_mask=sds((n_grid,), jnp.bool_))
+
+
+def _batch_shardings(b, mesh, rules):
+    return m.GraphCastBatch(**{
+        f.name: (sharding_for(getattr(b, f.name).shape,
+                              getattr(_AXES, f.name), mesh, rules)
+                 if f.name != "n_mesh" else 0)
+        for f in dataclasses.fields(m.GraphCastBatch)})
+
+
+def _build(shape, mesh, rules=None, unroll=False):
+    d = SHAPE_DEFS[shape]
+    cfg = (dataclasses.replace(CFG, scan_unroll=CFG.n_layers)
+           if unroll else CFG)
+    opt = get_optimizer("adamw")
+    specs = m.param_specs(cfg)
+    p_sds, o_sds, p_sh, o_sh = state_and_shardings(opt, specs, mesh, rules)
+    b_sds = _batch_sds(cfg, d["n"])
+    b_sh = _batch_shardings(b_sds, mesh, rules)
+    step = make_train_step(functools.partial(m.loss_fn, cfg=cfg), opt)
+    return CellPlan(
+        arch_id="graphcast", shape=shape, fn=step,
+        args=(p_sds, o_sds, b_sds, sds((), jnp.float32)),
+        in_shardings=(p_sh, o_sh, b_sh, replicated(mesh)),
+        out_shardings=(p_sh, o_sh, None),
+        donate=(0, 1), kind="train", rules=rules)
+
+
+def _build_smoke(shape):
+    cfg = SMOKE_CFG
+    n_grid = 48
+    key = jax.random.PRNGKey(0)
+    params = init_from_specs(m.param_specs(cfg), key)
+    ks = jax.random.split(key, 8)
+    e_gm, e_mesh, M = 4 * n_grid, cfg.n_mesh_edges, cfg.n_mesh
+    batch = m.GraphCastBatch(
+        grid_x=jax.random.normal(ks[0], (n_grid, cfg.n_vars)),
+        g2m_src=jax.random.randint(ks[1], (e_gm,), 0, n_grid),
+        g2m_dst=jax.random.randint(ks[2], (e_gm,), 0, M),
+        mesh_src=jax.random.randint(ks[3], (e_mesh,), 0, M),
+        mesh_dst=jax.random.randint(ks[4], (e_mesh,), 0, M),
+        m2g_src=jax.random.randint(ks[5], (e_gm,), 0, M),
+        m2g_dst=jax.random.randint(ks[6], (e_gm,), 0, n_grid),
+        targets=jax.random.normal(ks[7], (n_grid, cfg.n_vars)),
+        grid_mask=jnp.ones((n_grid,), jnp.bool_))
+    opt = get_optimizer("adamw")
+    step = make_train_step(functools.partial(m.loss_fn, cfg=cfg), opt)
+    return CellPlan("graphcast", shape, step,
+                    (params, opt.init(params), batch, jnp.float32(1e-3)),
+                    None, kind="train")
+
+
+ARCH = ArchSpec(arch_id="graphcast", family="gnn", shapes=GNN_SHAPES,
+                build=_build, build_smoke=_build_smoke)

@@ -1,0 +1,13 @@
+"""internlm2-1.8b [arXiv:2403.17297]: dense GQA LM.
+24L d_model=2048 16H (kv=8) d_ff=8192 vocab=92544; head_dim = 2048/16 = 128."""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, make_arch
+from repro.models.transformer import TransformerConfig
+
+ARCH = make_arch("internlm2-1.8b", LMArch(
+    cfg=TransformerConfig(
+        name="internlm2-1.8b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=8, d_ff=8192, vocab=92544, head_dim=128,
+        param_dtype=jnp.float32, compute_dtype=jnp.bfloat16),
+    optimizer="adamw", accum=2))

@@ -1,0 +1,200 @@
+"""Shared cell builders for the five LM-family architectures.
+
+Shapes (assigned):
+  train_4k     seq 4,096   global_batch 256   -> train_step (fwd+bwd+optimizer)
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (logits + KV cache)
+  decode_32k   seq 32,768  global_batch 128   -> decode_step (1 token vs cache)
+  long_500k    seq 524,288 global_batch 1     -> decode_step (linear in S; see
+                                                DESIGN.md long_500k note)
+
+Sharding: FSDP over (pod, data) on the d_model param dim, TP over model on
+heads/mlp/vocab/experts, batch over (pod, data), decode KV cache sequence over
+whatever axes the batch dim left free (handles the B=1 long-context cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cell import (
+    ArchSpec,
+    CellPlan,
+    sds,
+    state_and_shardings,
+)
+from repro.distributed.sharding import replicated, sharding_for
+from repro.models import transformer as T
+from repro.models.common import init_from_specs, spec_to_sds
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_DEFS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LMArch:
+    cfg: T.TransformerConfig
+    optimizer: str = "adamw"
+    accum: int = 1
+    lr: float = 3e-4
+    # per-kind sharding-rule preset names (see distributed.sharding.RULE_SETS);
+    # None -> DEFAULT_RULES. 'residual_sp' = Megatron sequence parallelism on
+    # the residual stream (required where saved activations dominate HBM).
+    train_rules: str | None = None
+    prefill_rules: str | None = None
+
+
+def _cache_axes(cfg):
+    # (L, B, Hkv, S, hd); cache_seq picks up every mesh axis batch leaves free
+    return ("layers", "batch", "kv_heads", "cache_seq", None)
+
+
+def build_cell(lm: LMArch, shape: str, mesh, rules=None,
+               unroll: bool = False) -> CellPlan:
+    from repro.distributed.sharding import RULE_SETS
+    cfg = lm.cfg
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_layers)
+    d = SHAPE_DEFS[shape]
+    B, S = d["batch"], d["seq"]
+    opt = get_optimizer(lm.optimizer)
+    specs = T.param_specs(cfg)
+    if rules is None:
+        preset = lm.train_rules if d["kind"] == "train" else (
+            lm.prefill_rules if d["kind"] == "prefill" else None)
+        rules = RULE_SETS[preset] if preset else None
+    accum = lm.accum
+    if unroll and d["kind"] == "train":
+        # analysis variant: lower ONE microbatch with accum_steps=1 — the HLO
+        # is exactly the accumulation-loop body (identical shapes every
+        # iteration); roofline.py multiplies flops/bytes/collectives by the
+        # step_multiplier recorded in notes. Keeps cost_analysis exact while
+        # the unrolled-HLO stays compilable in minutes.
+        B = B // accum
+        accum = 1
+
+    if d["kind"] == "train":
+        p_sds, o_sds, p_sh, o_sh = state_and_shardings(opt, specs, mesh, rules)
+        batch_sds = {"tokens": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+        b_sh = {k: sharding_for(v.shape, ("batch", None), mesh, rules)
+                for k, v in batch_sds.items()}
+        step = make_train_step(
+            functools.partial(_lm_loss, cfg=cfg), opt, accum_steps=accum)
+        fn = lambda p, o, b, lr: step(p, o, b, lr)
+        return CellPlan(
+            arch_id=cfg.name, shape=shape, fn=fn,
+            args=(p_sds, o_sds, batch_sds, sds((), jnp.float32)),
+            in_shardings=(p_sh, o_sh, b_sh, replicated(mesh)),
+            out_shardings=(p_sh, o_sh, None),
+            donate=(0, 1), kind="train",
+            rules=rules,
+            notes=f"accum={lm.accum} opt={lm.optimizer}"
+                  + (f" step_multiplier={lm.accum}" if unroll else ""))
+
+    p_sds = spec_to_sds(specs)
+    from repro.distributed.sharding import param_shardings
+    p_sh = param_shardings(specs, mesh, rules)
+
+    if d["kind"] == "prefill":
+        tok_sds = sds((B, S), jnp.int32)
+        tok_sh = sharding_for((B, S), ("batch", "sequence"), mesh, rules)
+        fn = functools.partial(_prefill_fn, cfg=cfg)
+        cache_sh = _kv_sharding(cfg, B, S, mesh, rules)
+        logits_sh = sharding_for((B, cfg.vocab), ("batch", "vocab"), mesh, rules)
+        return CellPlan(
+            arch_id=cfg.name, shape=shape, fn=fn,
+            args=(p_sds, tok_sds),
+            in_shardings=(p_sh, tok_sh),
+            out_shardings=((logits_sh, (cache_sh, cache_sh))),
+            kind="serve", rules=rules)
+
+    # decode: one new token against a live cache of size S
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    kv_sds = sds((L, B, Hkv, S, hd), cfg.compute_dtype)
+    cache_sh = _kv_sharding(cfg, B, S, mesh, rules)
+    tok_sds, len_sds = sds((B,), jnp.int32), sds((B,), jnp.int32)
+    vec_sh = sharding_for((B,), ("batch",), mesh, rules)
+    logits_sh = sharding_for((B, cfg.vocab), ("batch", "vocab"), mesh, rules)
+    fn = functools.partial(_decode_fn, cfg=cfg)
+    return CellPlan(
+        arch_id=cfg.name, shape=shape, fn=fn,
+        args=(p_sds, (kv_sds, kv_sds), tok_sds, len_sds),
+        in_shardings=(p_sh, (cache_sh, cache_sh), vec_sh, vec_sh),
+        out_shardings=(logits_sh, (cache_sh, cache_sh), vec_sh),
+        donate=(1,), kind="serve", rules=rules)
+
+
+def _kv_sharding(cfg, B, S, mesh, rules):
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return sharding_for((L, B, Hkv, S, hd), _cache_axes(cfg), mesh, rules)
+
+
+def _lm_loss(params, batch, cfg):
+    return T.loss_fn(params, batch, cfg)
+
+
+def _prefill_fn(params, tokens, cfg):
+    return T.prefill(params, tokens, cfg)
+
+
+def _decode_fn(params, cache, tokens, lengths, cfg):
+    return T.decode_step(params, cache, tokens, lengths, cfg)
+
+
+# -------------------------------------------------------------------- smoke
+def smoke_config(cfg: T.TransformerConfig) -> T.TransformerConfig:
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=128, head_dim=16,
+        n_experts=(4 if cfg.is_moe else 0), top_k=min(cfg.top_k, 2),
+        compute_dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+def build_smoke(lm: LMArch, shape: str) -> CellPlan:
+    cfg = smoke_config(lm.cfg)
+    d = SHAPE_DEFS[shape]
+    kind = d["kind"]
+    B, S = (4, 64) if kind == "train" else ((2, 64) if kind == "prefill" else (2, 128))
+    opt = get_optimizer(lm.optimizer)
+    key = jax.random.PRNGKey(0)
+    params = init_from_specs(T.param_specs(cfg), key)
+
+    if kind == "train":
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                 "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+        step = make_train_step(functools.partial(_lm_loss, cfg=cfg), opt,
+                               accum_steps=min(lm.accum, 2))
+        return CellPlan(cfg.name, shape, step,
+                        (params, opt.init(params), batch, jnp.float32(1e-3)),
+                        None, kind="train")
+    if kind == "prefill":
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        return CellPlan(cfg.name, shape, functools.partial(_prefill_fn, cfg=cfg),
+                        (params, tokens), None, kind="serve")
+    kv = jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, S, cfg.head_dim),
+                   cfg.compute_dtype)
+    tokens = jax.random.randint(key, (B,), 0, cfg.vocab)
+    lengths = jnp.full((B,), S // 2, jnp.int32)
+    return CellPlan(cfg.name, shape, functools.partial(_decode_fn, cfg=cfg),
+                    (params, (kv, kv), tokens, lengths), None, kind="serve")
+
+
+def make_arch(arch_id: str, lm: LMArch) -> ArchSpec:
+    return ArchSpec(
+        arch_id=arch_id, family="lm", shapes=LM_SHAPES,
+        build=lambda shape, mesh, rules=None, unroll=False: build_cell(
+            lm, shape, mesh, rules, unroll),
+        build_smoke=lambda shape: build_smoke(lm, shape),
+        describe=f"{lm.cfg.n_layers}L d={lm.cfg.d_model} "
+                 f"{'MoE' if lm.cfg.is_moe else 'dense'}")

@@ -1,0 +1,124 @@
+"""nequip [arXiv:2101.03164]: 5 interaction layers, 32 channels/irrep,
+l_max=2, 8 Bessel RBFs, cutoff 5 A, E(3) tensor-product messages.
+
+molecule is the native shape (energies + forces); the giant graph shapes run
+energy-only (no force supervision exists there, and force training is
+grad-through-energy — double memory on 61.9M-edge graphs)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cell import ArchSpec, CellPlan, sds, state_and_shardings
+from repro.configs.gnn_common import (GNN_SHAPES, SHAPE_DEFS, pad512,
+                                       random_graph_batch)
+from repro.distributed.sharding import replicated, sharding_for
+from repro.models.common import init_from_specs
+from repro.models.gnn import nequip as m
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+CFG = m.NequIPConfig(name="nequip", n_layers=5, d_hidden=32, l_max=2,
+                     n_rbf=8, cutoff=5.0, n_species=10)
+# the 61.9M-edge shape runs the same architecture in bf16 (no force training
+# there; fp32 equivariance is validated in tests on the molecule path)
+CFG_BF16 = dataclasses.replace(CFG, compute_dtype=jnp.bfloat16)
+SMOKE_CFG = m.NequIPConfig(name="nequip", n_layers=2, d_hidden=8, l_max=2,
+                           n_rbf=4, cutoff=5.0, n_species=4)
+
+_AXES = dict(
+    positions=("nodes", None), species=("nodes",), edge_src=("edges",),
+    edge_dst=("edges",), edge_mask=("edges",), node_mask=("nodes",),
+    graph_ids=("nodes",), energy_targets=("batch",),
+    force_targets=("nodes", None),
+)
+
+
+def _batch_sds(d):
+    n, e, g = pad512(d["n"]), pad512(d["e"]), max(d["graphs"], 1)
+    i32 = jnp.int32
+    return dict(
+        positions=sds((n, 3)), species=sds((n,), i32),
+        edge_src=sds((e,), i32), edge_dst=sds((e,), i32),
+        edge_mask=sds((e,), jnp.bool_), node_mask=sds((n,), jnp.bool_),
+        graph_ids=sds((n,), i32), energy_targets=sds((g,)),
+        force_targets=sds((n, 3)))
+
+
+def _loss_shardmap(params, batch, cfg, mesh, axis_names):
+    """Energy-only loss over the destination-partitioned shard_map forward
+    (EAGr reader partitioning applied to message passing; §Perf I10)."""
+    e = m.forward_energy_shardmap(
+        params, batch["positions"], batch["species"], batch["edge_src"],
+        batch["edge_dst"], batch["edge_mask"], batch["node_mask"],
+        batch["graph_ids"], 1, cfg, mesh, axis_names)
+    e_loss = jnp.mean((e - batch["energy_targets"].astype(jnp.float32)) ** 2)
+    return e_loss, {"e_mse": e_loss}
+
+
+# huge single-graph shapes route through the shard_map path; molecule keeps
+# the fp32 pjit path (forces + equivariance tests run there)
+_SHARDMAP_SHAPES = ("ogb_products", "minibatch_lg", "full_graph_sm")
+
+
+def _build(shape, mesh, rules=None, unroll=False):  # model is python-unrolled
+    d = SHAPE_DEFS[shape]
+    use_forces = shape == "molecule"
+    cfg = CFG if shape == "molecule" else CFG_BF16
+    opt = get_optimizer("adamw")
+    specs = m.param_specs(cfg)
+    p_sds, o_sds, p_sh, o_sh = state_and_shardings(opt, specs, mesh, rules)
+    b_sds = _batch_sds(d)
+    b_sh = {k: sharding_for(v.shape, _AXES[k], mesh, rules)
+            for k, v in b_sds.items()}
+    if shape in _SHARDMAP_SHAPES:
+        axis_names = tuple(a for a in ("pod", "data", "model")
+                           if a in mesh.axis_names)
+        # params must be replicated for the shard_map in_specs contract
+        p_sh = jax.tree.map(lambda _: replicated(mesh), p_sh)
+        o_sh = jax.tree.map(lambda _: replicated(mesh), o_sh)
+        loss = functools.partial(_loss_shardmap, cfg=cfg, mesh=mesh,
+                                 axis_names=axis_names)
+        notes = "shard_map dst-partitioned MP (energy-only)"
+    else:
+        loss = functools.partial(m.loss_fn, cfg=cfg, use_forces=use_forces)
+        notes = "" if use_forces else "energy-only"
+    step = make_train_step(loss, opt)
+    return CellPlan(
+        arch_id="nequip", shape=shape, fn=step,
+        args=(p_sds, o_sds, b_sds, sds((), jnp.float32)),
+        in_shardings=(p_sh, o_sh, b_sh, replicated(mesh)),
+        out_shardings=(p_sh, o_sh, None),
+        donate=(0, 1), kind="train", rules=rules, notes=notes)
+
+
+def _build_smoke(shape):
+    d = dict(SHAPE_DEFS[shape])
+    d.update(n=min(d["n"], 60), e=min(d["e"], 200), graphs=min(d["graphs"], 4))
+    g = max(d["graphs"], 1)
+    use_forces = shape == "molecule"
+    cfg = SMOKE_CFG
+    params = init_from_specs(m.param_specs(cfg), jax.random.PRNGKey(0))
+    gb = random_graph_batch(jax.random.PRNGKey(1), d["n"], d["e"], 4, 2,
+                            graphs=d["graphs"], geometric=True,
+                            graph_task=bool(d["graphs"]))
+    batch = dict(
+        positions=gb.positions, species=jnp.clip(gb.species, 0, cfg.n_species - 1),
+        edge_src=gb.edge_src, edge_dst=gb.edge_dst, edge_mask=gb.edge_mask,
+        node_mask=gb.node_mask,
+        graph_ids=gb.graph_ids if gb.graph_ids is not None
+        else jnp.zeros((d["n"],), jnp.int32),
+        energy_targets=jnp.zeros((g,)), force_targets=jnp.zeros((d["n"], 3)))
+    opt = get_optimizer("adamw")
+    step = make_train_step(
+        functools.partial(m.loss_fn, cfg=cfg, use_forces=use_forces), opt)
+    return CellPlan("nequip", shape, step,
+                    (params, opt.init(params), batch, jnp.float32(1e-3)),
+                    None, kind="train")
+
+
+ARCH = ArchSpec(arch_id="nequip", family="gnn", shapes=GNN_SHAPES,
+                build=_build, build_smoke=_build_smoke)

@@ -1,0 +1,181 @@
+"""Aggregate functions and the user-defined aggregate API (paper §2.2.3).
+
+A *PAO* (partial aggregate object) is a dense fp32 vector of ``pao_dim``
+entries; every overlay node owns one row of the global ``(n_nodes, pao_dim)``
+PAO array. The engine only needs four vectorized operations from an aggregate:
+
+  lift(raw)            raw write values -> PAO contributions
+  segment_merge(x,seg) merge many PAO rows by segment id (the MERGE of the
+                       classic INITIALIZE/UPDATE/FINALIZE API, batched)
+  subtract(a, b)       remove contribution b from a (only if invertible)
+  finalize(pao)        PAO -> user-facing answer
+
+Duplicate-insensitive aggregates (MAX/MIN/UNIQUE) tolerate multiple overlay
+paths per writer; subtractable aggregates (SUM/COUNT/AVG/TOP-K) tolerate
+negative edges (§2.2.1). Holistic aggregates are supported through bounded-
+domain PAOs (TOP-K below keeps a dense count vector over a topic domain —
+exact for bounded domains, the standard streaming relaxation otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -3.0e38  # representable in fp32/bf16; used as the MAX identity
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """Vectorized user-defined aggregate (paper §2.2.3 API, batched).
+
+    ``combine`` is either 'sum' (signed, supports negative edges) or 'max' /
+    'min' (duplicate-insensitive, recompute-on-write in the engine).
+    """
+
+    name: str
+    pao_dim: int
+    combine: str                      # 'sum' | 'max' | 'min'
+    lift: Callable[[jnp.ndarray], jnp.ndarray]          # (B,) raw -> (B, pao_dim)
+    finalize: Callable[[jnp.ndarray], jnp.ndarray]      # (..., pao_dim) -> answer
+    dup_insensitive: bool = False
+    supports_subtraction: bool = False
+
+    # ------------------------------------------------------------- identities
+    @property
+    def identity(self) -> float:
+        if self.combine == "sum":
+            return 0.0
+        return NEG_INF if self.combine == "max" else -NEG_INF
+
+    def init_pao(self, n_rows: int) -> jnp.ndarray:
+        return jnp.full((n_rows, self.pao_dim), self.identity, dtype=jnp.float32)
+
+    # ------------------------------------------------------------- merge ops
+    def segment_merge(self, x: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+        """MERGE many PAO rows grouped by segment id. x: (E, pao_dim)."""
+        if self.combine == "sum":
+            return jax.ops.segment_sum(x, seg, num_segments=num_segments)
+        if self.combine == "max":
+            return jax.ops.segment_max(
+                x, seg, num_segments=num_segments, indices_are_sorted=False
+            )
+        return jax.ops.segment_min(x, seg, num_segments=num_segments)
+
+    def merge(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if self.combine == "sum":
+            return a + b
+        return jnp.maximum(a, b) if self.combine == "max" else jnp.minimum(a, b)
+
+    def subtract(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if not self.supports_subtraction:
+            raise ValueError(f"{self.name} does not support subtraction")
+        return a - b
+
+    # ------------------------------------------------- scalar reference (UDF)
+    # The classic per-event API, used by tests as an oracle and available for
+    # user-defined aggregates that want event-at-a-time semantics.
+    def INITIALIZE(self) -> np.ndarray:
+        return np.full((self.pao_dim,), self.identity, dtype=np.float64)
+
+    def UPDATE(self, pao: np.ndarray, old, new) -> np.ndarray:
+        lifted_new = np.asarray(jax.device_get(self.lift(jnp.asarray([new]))))[0]
+        if self.combine == "sum":
+            out = pao + lifted_new
+            if old is not None:
+                lifted_old = np.asarray(jax.device_get(self.lift(jnp.asarray([old]))))[0]
+                out = out - lifted_old
+            return out
+        fn = np.maximum if self.combine == "max" else np.minimum
+        if old is not None:
+            raise ValueError("non-invertible aggregate cannot UPDATE out an old value")
+        return fn(pao, lifted_new)
+
+    def FINALIZE(self, pao: np.ndarray):
+        return np.asarray(jax.device_get(self.finalize(jnp.asarray(pao, dtype=jnp.float32))))
+
+
+# --------------------------------------------------------------------- built-ins
+def sum_aggregate(value_dim: int = 1) -> Aggregate:
+    return Aggregate(
+        name="sum", pao_dim=value_dim, combine="sum",
+        lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
+        finalize=lambda p: p,
+        supports_subtraction=True,
+    )
+
+
+def count_aggregate() -> Aggregate:
+    return Aggregate(
+        name="count", pao_dim=1, combine="sum",
+        lift=lambda v: jnp.ones((v.shape[0], 1), dtype=jnp.float32),
+        finalize=lambda p: p,
+        supports_subtraction=True,
+    )
+
+
+def avg_aggregate() -> Aggregate:
+    return Aggregate(
+        name="avg", pao_dim=2, combine="sum",
+        lift=lambda v: jnp.stack([v.reshape(-1).astype(jnp.float32),
+                                  jnp.ones_like(v.reshape(-1), dtype=jnp.float32)], axis=-1),
+        finalize=lambda p: p[..., 0] / jnp.maximum(p[..., 1], 1.0),
+        supports_subtraction=True,
+    )
+
+
+def max_aggregate(value_dim: int = 1) -> Aggregate:
+    return Aggregate(
+        name="max", pao_dim=value_dim, combine="max",
+        lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
+        finalize=lambda p: p,
+        dup_insensitive=True,
+    )
+
+
+def min_aggregate(value_dim: int = 1) -> Aggregate:
+    return Aggregate(
+        name="min", pao_dim=value_dim, combine="min",
+        lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
+        finalize=lambda p: p,
+        dup_insensitive=True,
+    )
+
+
+def topk_aggregate(k: int = 3, domain: int = 64) -> Aggregate:
+    """Paper's TOP-K: the k most *frequent* values (generalized mode, §5.1).
+    PAO = dense count vector over a bounded topic-id domain; finalize returns
+    the top-k topic ids (most-frequent first)."""
+
+    def lift(v: jnp.ndarray) -> jnp.ndarray:
+        ids = jnp.clip(v.reshape(-1).astype(jnp.int32), 0, domain - 1)
+        return jax.nn.one_hot(ids, domain, dtype=jnp.float32)
+
+    def finalize(p: jnp.ndarray) -> jnp.ndarray:
+        _, idx = jax.lax.top_k(p, k)
+        return idx
+
+    return Aggregate(
+        name="topk", pao_dim=domain, combine="sum",
+        lift=lift, finalize=finalize, supports_subtraction=True,
+    )
+
+
+BUILTINS: dict[str, Callable[..., Aggregate]] = {
+    "sum": sum_aggregate,
+    "count": count_aggregate,
+    "avg": avg_aggregate,
+    "max": max_aggregate,
+    "min": min_aggregate,
+    "topk": topk_aggregate,
+}
+
+
+def make_aggregate(name: str, **kwargs) -> Aggregate:
+    try:
+        return BUILTINS[name.lower().replace("-", "")](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown aggregate {name!r}; built-ins: {sorted(BUILTINS)}") from None

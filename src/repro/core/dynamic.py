@@ -1,0 +1,238 @@
+"""Incremental overlay maintenance under data-graph changes (paper §3.3).
+
+Adopts any constructed overlay (VNM*/IOB) into an indexed, mutable form and
+applies edge/node additions and deletions using the IOB machinery:
+
+  add edge   — if |Δ(I(r))| > threshold, cover the delta with (possibly new)
+               aggregation nodes; else add direct writer edges; a per-reader
+               direct-edge counter triggers IOB restructuring past the threshold.
+  delete edge— if few upstream nodes are affected, split them so the reader
+               stops consuming the deleted writers; else drop the reader's
+               inputs and re-cover with IOB.
+  add node   — new writer node + IOB insertion of the new reader.
+  delete node— remove v_w and v_r with all incident edges (sound for all
+               downstream aggregates: a deleted node leaves every neighborhood).
+
+Negative (subtraction) edges into readers are supported: adding a data-graph
+edge whose writer already has a negative edge to the reader simply cancels the
+negative edge; deletions never touch negative edges (they reference non-members).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.iob import IOBBuilder
+from repro.core.overlay import Overlay
+
+
+class DynamicOverlay:
+    def __init__(self, builder: IOBBuilder, reader_node: dict[int, int],
+                 neg_edges: dict[int, list[int]], reader_inputs: dict[int, set[int]],
+                 threshold: int = 4, split_limit: int = 5):
+        self.b = builder
+        self.reader_node = reader_node          # base reader id -> overlay node
+        self.neg_edges = neg_edges              # reader overlay node -> [writer overlay nodes]
+        self.reader_inputs = reader_inputs      # base reader id -> set of base writers
+        self.threshold = threshold
+        self.split_limit = split_limit
+        self.direct_writer_count: dict[int, int] = {}
+        self.dup_insensitive = False
+
+    # ------------------------------------------------------------ adoption
+    @staticmethod
+    def from_overlay(ov: Overlay, reader_inputs: dict[int, set[int]],
+                     threshold: int = 4, split_limit: int = 5) -> "DynamicOverlay":
+        b = IOBBuilder()
+        neg: dict[int, list[int]] = {}
+        # nodes adopt 1:1 (same ids); members computed from positive closure
+        sets = ov.input_writer_sets()
+        for v in range(ov.n_nodes):
+            b.kinds.append(ov.kinds[v])
+            b.origin.append(ov.origin[v])
+            b.inputs.append([s for s, sign in ov.in_edges[v] if sign > 0])
+            members = set(sets[v]) if ov.kinds[v] != "W" else {ov.origin[v]}
+            b.members.append(members)
+            for w in members:
+                b.rev.setdefault(w, set()).add(v)
+            if ov.kinds[v] == "W":
+                b.writer_node[ov.origin[v]] = v
+            negs = [s for s, sign in ov.in_edges[v] if sign < 0]
+            if negs:
+                neg[v] = negs
+        reader_node = {ov.origin[v]: v for v in range(ov.n_nodes) if ov.kinds[v] == "R"}
+        dyn = DynamicOverlay(b, reader_node, neg, {r: set(s) for r, s in reader_inputs.items()},
+                             threshold=threshold, split_limit=split_limit)
+        dyn.dup_insensitive = ov.dup_insensitive
+        return dyn
+
+    # ------------------------------------------------------------ helpers
+    def _upstream_nodes(self, node: int) -> set[int]:
+        seen = set()
+        stack = [node]
+        while stack:
+            v = stack.pop()
+            for s in self.b.inputs[v]:
+                if s not in seen:
+                    seen.add(s)
+                    stack.append(s)
+        return seen
+
+    def _ensure_reader(self, r: int) -> int:
+        if r in self.reader_node:
+            return self.reader_node[r]
+        nid = self.b.add_node("R", r, set())
+        self.reader_node[r] = nid
+        self.reader_inputs.setdefault(r, set())
+        return nid
+
+    # ------------------------------------------------------------ additions
+    def add_reader_inputs(self, r: int, delta: set[int]) -> None:
+        """Reader r's neighborhood gained the writers in ``delta`` (§3.3)."""
+        delta = set(delta) - self.reader_inputs.get(r, set())
+        if not delta:
+            return
+        rid = self._ensure_reader(r)
+        self.reader_inputs[r] |= delta
+        # members/rev for the reader reflect its I-set
+        self.b.members[rid] |= delta
+        for w in delta:
+            self.b.rev.setdefault(w, set()).add(rid)
+        # cancel matching negative edges first
+        negs = self.neg_edges.get(rid, [])
+        cancelled = set()
+        for wn in list(negs):
+            wbase = self.b.origin[wn]
+            if wbase in delta:
+                negs.remove(wn)
+                cancelled.add(wbase)
+        delta -= cancelled
+        if not delta:
+            return
+        if len(delta) > self.threshold:
+            # cover the delta with aggregation nodes (best case: reuse one)
+            self.b.cover_reader(rid, delta)
+        else:
+            for w in sorted(delta):
+                self.b.inputs[rid].append(self.b.add_writer(w))
+            cnt = self.direct_writer_count.get(rid, 0) + len(delta)
+            self.direct_writer_count[rid] = cnt
+            if cnt > self.threshold:
+                self._restructure_direct_edges(rid)
+                self.direct_writer_count[rid] = 0
+
+    def _restructure_direct_edges(self, rid: int) -> None:
+        """Re-cover the reader's direct writer edges through IOB (§3.3)."""
+        direct = [d for d in self.b.inputs[rid] if self.b.kinds[d] == "W"]
+        if len(direct) < 2:
+            return
+        keep = [d for d in self.b.inputs[rid] if self.b.kinds[d] != "W"]
+        self.b.inputs[rid] = keep
+        self.b.cover_reader(rid, {self.b.origin[d] for d in direct})
+
+    def add_edge(self, u: int, v: int, affected: dict[int, set[int]] | None = None) -> None:
+        """Data-graph edge u -> v added. For 1-hop in-neighborhoods the affected
+        reader is v with delta {u}; callers with other N() pass ``affected``
+        explicitly as {reader: delta_writers}."""
+        affected = affected if affected is not None else {v: {u}}
+        for r, delta in affected.items():
+            self.add_reader_inputs(r, delta)
+
+    def add_node(self, u: int, in_neighbors: set[int], out_readers: set[int]) -> None:
+        """New base node u: a writer feeding ``out_readers`` and a reader over
+        ``in_neighbors`` (§3.3)."""
+        self.b.add_writer(u)
+        for r in out_readers:
+            self.add_reader_inputs(r, {u})
+        if in_neighbors:
+            self.add_reader_inputs(u, set(in_neighbors))
+
+    # ------------------------------------------------------------ deletions
+    def remove_reader_inputs(self, r: int, delta: set[int]) -> None:
+        delta = set(delta) & self.reader_inputs.get(r, set())
+        if not delta:
+            return
+        rid = self.reader_node[r]
+        self.reader_inputs[r] -= delta
+        self.b.members[rid] -= delta
+        for w in delta:
+            self.b.rev.get(w, set()).discard(rid)
+        if self.neg_edges.get(rid):
+            # negative edges pair with specific positive paths; untangling them
+            # under deletion is not worth the bookkeeping — rebuild this reader.
+            self.b.inputs[rid] = []
+            self.neg_edges.pop(rid, None)
+            self.b.cover_reader(rid, set(self.reader_inputs[r]))
+            return
+        affected = [d for d in self.b.inputs[rid] if self.b.members[d] & delta]
+        if len(affected) <= self.split_limit:
+            new_inputs = [d for d in self.b.inputs[rid] if d not in set(affected)]
+            for d in affected:
+                useful = (self.b.members[d] - delta) & self.reader_inputs[r]
+                if not useful:
+                    continue
+                if self.b.kinds[d] == "W":
+                    continue  # direct writer edge to a deleted member: just drop
+                sub = self.b._split(d, useful)
+                if sub is not None:
+                    new_inputs.append(sub)
+                    useful -= self.b.members[sub]
+                if useful:
+                    self.b.inputs[rid] = new_inputs
+                    self.b.cover_reader(rid, useful)
+                    new_inputs = self.b.inputs[rid]
+            self.b.inputs[rid] = new_inputs
+        else:
+            # heavy change: drop all inputs and re-insert via IOB
+            self.b.inputs[rid] = []
+            self.neg_edges.pop(rid, None)
+            self.b.cover_reader(rid, set(self.reader_inputs[r]))
+
+    def delete_edge(self, u: int, v: int, affected: dict[int, set[int]] | None = None) -> None:
+        affected = affected if affected is not None else {v: {u}}
+        for r, delta in affected.items():
+            if r in self.reader_node:
+                self.remove_reader_inputs(r, delta)
+
+    def delete_node(self, u: int) -> None:
+        """Remove u_w and u_r and all incident edges (§3.3)."""
+        b = self.b
+        wid = b.writer_node.pop(u, None)
+        if wid is not None:
+            consumers = [n for n in range(len(b.kinds)) if wid in b.inputs[n]]
+            for n in consumers:
+                b.inputs[n] = [d for d in b.inputs[n] if d != wid]
+            # u leaves every I-set and every reader's tracked input set
+            for n in b.rev.get(u, set()).copy():
+                b.members[n].discard(u)
+                if b.kinds[n] == "R":
+                    self.reader_inputs.get(b.origin[n], set()).discard(u)
+            b.rev.pop(u, None)
+            for negs in self.neg_edges.values():
+                while wid in negs:
+                    negs.remove(wid)
+        rid = self.reader_node.pop(u, None)
+        if rid is not None:
+            b.inputs[rid] = []
+            self.neg_edges.pop(rid, None)
+            self.reader_inputs.pop(u, None)
+            for w in list(b.members[rid]):
+                b.rev.get(w, set()).discard(rid)
+            b.members[rid] = set()
+
+    # ------------------------------------------------------------ export
+    def to_overlay(self) -> Overlay:
+        ov = Overlay(kinds=list(self.b.kinds), origin=list(self.b.origin),
+                     in_edges=[[(s, 1) for s in ins] for ins in self.b.inputs],
+                     dup_insensitive=self.dup_insensitive)
+        for rid, negs in self.neg_edges.items():
+            for wn in negs:
+                ov.in_edges[rid].append((wn, -1))
+        # deleted/superseded/emptied reader nodes linger: only the current node
+        # for each base reader with a non-empty neighborhood keeps the 'R' label
+        for v in range(ov.n_nodes):
+            if ov.kinds[v] == "R" and (
+                self.reader_node.get(ov.origin[v]) != v
+                or not self.reader_inputs.get(ov.origin[v])
+            ):
+                ov.kinds[v] = "I"
+        return ov.pruned()

@@ -1,0 +1,34 @@
+"""Min-hash shingle ordering of readers (paper §3.2.1, after Buehrer et al. /
+Chierichetti et al.). Readers with similar input lists get similar shingle
+tuples, so a lexicographic sort clusters biclique candidates together."""
+from __future__ import annotations
+
+import numpy as np
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + _MIX).astype(np.uint64)
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def shingle_value(items: np.ndarray, seed: int) -> int:
+    """min-hash of an item set under hash seed ``seed``."""
+    if items.size == 0:
+        return 0
+    h = _splitmix64(items.astype(np.uint64) ^ _splitmix64(np.uint64(seed) * np.ones(1, np.uint64)))
+    return int(h.min())
+
+
+def shingle_order(input_lists: dict[int, np.ndarray], n_hashes: int = 2, seed: int = 0) -> list[int]:
+    """Return reader ids sorted lexicographically by their shingle tuples."""
+    keys = {}
+    for r, items in input_lists.items():
+        keys[r] = tuple(shingle_value(np.asarray(items), seed + i) for i in range(n_hashes))
+    return sorted(input_lists.keys(), key=lambda r: (keys[r], r))

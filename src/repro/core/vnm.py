@@ -1,0 +1,201 @@
+"""VNM-family overlay construction (paper §3.2.2–§3.2.4).
+
+All four variants share one loop: shingle-order the readers, chunk them into
+groups, FP-tree-mine each group for positive-benefit bicliques, replace each
+biclique with a virtual (partial aggregation) node, and iterate on the rewritten
+bipartite graph until no more benefit is found.
+
+  vnm    — fixed chunk size (Buehrer & Chellapilla's algorithm, the baseline)
+  vnm_a  — adaptive chunk-size schedule (§3.2.2)
+  vnm_n  — negative / subtraction edges, quasi-bicliques (§3.2.3)
+  vnm_d  — duplicate-insensitive overlays, overlapping groups + edge reuse (§3.2.4)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.bipartite import Bipartite
+from repro.core.fptree import FPTree, ReaderRecord
+from repro.core.overlay import Overlay
+from repro.core.shingles import shingle_order
+
+
+@dataclasses.dataclass
+class ConstructionStats:
+    algorithm: str
+    iterations: int = 0
+    bicliques: int = 0
+    seconds: float = 0.0
+    si_per_iteration: list[float] = dataclasses.field(default_factory=list)
+    chunk_sizes: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _State:
+    records: dict[int, ReaderRecord]
+    virtual_members: dict[int, list[tuple[int, int]]]  # virtual item -> [(item, +1)]
+    next_item: int
+
+    def current_edges(self) -> int:
+        e = sum(len(m) for m in self.virtual_members.values())
+        for rec in self.records.values():
+            e += len(rec.active) + len(rec.frozen)
+        return e
+
+
+def _init_state(bip: Bipartite) -> _State:
+    records = {
+        r: ReaderRecord(reader=r, active=set(map(int, ins)), frozen=[], mined=set())
+        for r, ins in bip.reader_inputs.items()
+    }
+    return _State(records=records, virtual_members={}, next_item=bip.n_base)
+
+
+def _apply_biclique(state: _State, bic, group: list[ReaderRecord], mode: str) -> int:
+    """Replace the mined biclique with a virtual node. Returns the number of
+    readers that actually consume it (readers whose individual edge saving
+    would be negative — possible with negative edges — are left untouched)."""
+    items = set(bic.items)
+    plan: list[tuple[ReaderRecord, set[int], list[int]]] = []
+    for r in bic.readers:
+        rec = state.records[r]
+        covered = items & rec.active
+        # Negatives for items the reader still held directly are duplicate-
+        # compensation markers: this biclique covers them, so no subtraction
+        # edge is needed; the rest are true subtraction edges.
+        true_negs = [it for it in bic.neg_items.get(r, []) if it not in covered]
+        if len(covered) - 1 - len(true_negs) < 0:
+            continue  # this reader would lose edges; keep its direct edges
+        plan.append((rec, covered, true_negs))
+    if len(plan) < 2:
+        return 0
+    vid = state.next_item
+    state.next_item += 1
+    state.virtual_members[vid] = [(it, 1) for it in bic.items]
+    for rec, covered, true_negs in plan:
+        rec.active -= covered
+        if mode == "dup":
+            rec.mined |= covered
+        for it in true_negs:
+            rec.frozen.append((it, -1))
+        rec.active.add(vid)
+    return len(plan)
+
+
+def _mine_group(state: _State, group: list[ReaderRecord], mode: str, k1: int, k2: int,
+                benefit_hist: dict[int, int], max_bicliques: int = 64) -> int:
+    found = 0
+    for _ in range(max_bicliques):
+        tree = FPTree(mode=mode, k1=k1, k2=k2)
+        tree.build(group)
+        bic = tree.mine_best()
+        if bic is None:
+            break
+        consumers = _apply_biclique(state, bic, group, mode)
+        if consumers == 0:
+            break  # nothing changed; rebuilding would re-find the same biclique
+        benefit_hist[len(bic.readers)] = benefit_hist.get(len(bic.readers), 0) + bic.benefit
+        found += 1
+    return found
+
+
+def _chunk(readers: list[int], chunk_size: int, overlap_pct: float) -> list[list[int]]:
+    if not readers:
+        return []
+    step = max(1, int(round(chunk_size * (1.0 - overlap_pct / 100.0))))
+    groups = []
+    i = 0
+    while i < len(readers):
+        g = readers[i : i + chunk_size]
+        if len(g) >= 2:
+            groups.append(g)
+        if i + chunk_size >= len(readers):
+            break
+        i += step
+    return groups or [readers]
+
+
+def _adaptive_next_chunk(benefit_hist: dict[int, int], c_i: int, frac: float = 0.9,
+                         c_min: int = 8) -> int:
+    """c_{i+1} = smallest c <= c_i with sum_{s<=c} B_s > frac * sum_{s<=c_i} B_s (§3.2.2)."""
+    total = sum(b for s, b in benefit_hist.items() if s <= c_i)
+    if total <= 0:
+        return c_i
+    acc = 0
+    for c in sorted(benefit_hist.keys()):
+        acc += benefit_hist[c]
+        if acc > frac * total:
+            return max(c_min, min(c, c_i))
+    return c_i
+
+
+def _assemble(state: _State, bip: Bipartite, dup_insensitive: bool) -> Overlay:
+    ov = Overlay(kinds=[], origin=[], in_edges=[], dup_insensitive=dup_insensitive)
+    item_to_node: dict[int, int] = {}
+    for w in bip.writers:
+        item_to_node[int(w)] = ov.add_node("W", int(w))
+    # virtual items were created in increasing id order; members only reference
+    # earlier items, so a single ordered pass suffices.
+    for vid in sorted(state.virtual_members.keys()):
+        node = ov.add_node("I", -1)
+        item_to_node[vid] = node
+        for it, sign in state.virtual_members[vid]:
+            ov.add_edge(item_to_node[it], node, sign)
+    for r, rec in state.records.items():
+        node = ov.add_node("R", int(r))
+        for it in sorted(rec.active):
+            ov.add_edge(item_to_node[it], node, 1)
+        for it, sign in rec.frozen:
+            ov.add_edge(item_to_node[it], node, sign)
+    return ov
+
+
+def construct_vnm(
+    bip: Bipartite,
+    *,
+    variant: str = "vnm_a",
+    chunk_size: int = 100,
+    max_iterations: int = 10,
+    k1: int = 2,
+    k2: int = 5,
+    overlap_pct: float = 25.0,
+    adapt_frac: float = 0.9,
+    seed: int = 0,
+) -> tuple[Overlay, ConstructionStats]:
+    assert variant in ("vnm", "vnm_a", "vnm_n", "vnm_d")
+    mode = {"vnm": "basic", "vnm_a": "basic", "vnm_n": "neg", "vnm_d": "dup"}[variant]
+    overlap = overlap_pct if variant == "vnm_d" else 0.0
+    state = _init_state(bip)
+    stats = ConstructionStats(algorithm=variant)
+    base_edges = bip.n_edges
+    t0 = time.perf_counter()
+    c = chunk_size
+    for it in range(max_iterations):
+        active_lists = {
+            r: np.array(sorted(rec.active), dtype=np.int64)
+            for r, rec in state.records.items()
+            if len(rec.active) >= 2
+        }
+        if not active_lists:
+            break
+        order = shingle_order(active_lists, seed=seed + it)
+        groups = _chunk(order, c, overlap)
+        benefit_hist: dict[int, int] = {}
+        found = 0
+        for g in groups:
+            group_records = [state.records[r] for r in g]
+            found += _mine_group(state, group_records, mode, k1, k2, benefit_hist)
+        stats.iterations += 1
+        stats.bicliques += found
+        stats.chunk_sizes.append(c)
+        stats.si_per_iteration.append(1.0 - state.current_edges() / max(1, base_edges))
+        if found == 0:
+            break
+        if variant in ("vnm_a", "vnm_n", "vnm_d"):
+            c = _adaptive_next_chunk(benefit_hist, c, frac=adapt_frac)
+    stats.seconds = time.perf_counter() - t0
+    overlay = _assemble(state, bip, dup_insensitive=(variant == "vnm_d")).pruned()
+    return overlay, stats

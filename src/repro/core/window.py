@@ -1,0 +1,191 @@
+"""Sliding windows over per-writer content streams (paper §2.1).
+
+Tuple-based (last ``c`` updates) and time-based (last ``T`` time units)
+windows, stored as fixed-capacity ring buffers so the whole writer state is
+three dense arrays — jit-able and shardable:
+
+  values (n_writers, cap)   raw written values (NaN-free; ``count`` masks)
+  stamps (n_writers, cap)   arrival timestamps (time windows only)
+  head   (n_writers,)       next write slot
+  count  (n_writers,)       number of live entries (<= cap)
+
+``window_pao`` evaluates the aggregate over each writer's current window —
+used to (re)compute writer PAOs; ``push_writes`` returns the per-writer PAO
+*delta* for invertible aggregates (new lift minus evicted lift).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregates import Aggregate
+
+
+class WindowState(NamedTuple):
+    values: jnp.ndarray   # (n_writers, cap) fp32
+    stamps: jnp.ndarray   # (n_writers, cap) fp32
+    head: jnp.ndarray     # (n_writers,) int32
+    count: jnp.ndarray    # (n_writers,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    kind: str = "tuple"      # 'tuple' | 'time'
+    size: float = 1          # c for tuple windows, T for time windows
+    capacity: int = 0        # ring capacity; defaults to c (tuple) / provided (time)
+
+    @property
+    def cap(self) -> int:
+        if self.capacity:
+            return int(self.capacity)
+        if self.kind == "tuple":
+            return max(1, int(self.size))
+        raise ValueError("time windows need an explicit ring capacity")
+
+
+def init_windows(n_writers: int, spec: WindowSpec) -> WindowState:
+    cap = spec.cap
+    return WindowState(
+        values=jnp.zeros((n_writers, cap), dtype=jnp.float32),
+        stamps=jnp.full((n_writers, cap), -jnp.inf, dtype=jnp.float32),
+        head=jnp.zeros((n_writers,), dtype=jnp.int32),
+        count=jnp.zeros((n_writers,), dtype=jnp.int32),
+    )
+
+
+def apply_writes_scan(
+    state: WindowState,
+    spec: WindowSpec,
+    writer_rows: jnp.ndarray,   # (B,) int32 rows into the window arrays
+    values: jnp.ndarray,        # (B,) fp32
+    stamps: jnp.ndarray,        # (B,) fp32
+    mask: jnp.ndarray,          # (B,) bool — padding lanes are False
+) -> tuple[WindowState, jnp.ndarray, jnp.ndarray]:
+    """Event-at-a-time reference implementation (a scan over the batch).
+    Semantics oracle for apply_writes; O(batch) sequential steps."""
+    cap = spec.cap
+
+    def step(carry, inp):
+        vals, stms, head, cnt = carry
+        row, v, t, m = inp
+        slot = head[row]
+        evicted = vals[row, slot]
+        evicted_valid = m & (cnt[row] >= cap)
+        vals = vals.at[row, slot].set(jnp.where(m, v, vals[row, slot]))
+        stms = stms.at[row, slot].set(jnp.where(m, t, stms[row, slot]))
+        head = head.at[row].set(jnp.where(m, (slot + 1) % cap, slot))
+        cnt = cnt.at[row].set(jnp.where(m, jnp.minimum(cnt[row] + 1, cap), cnt[row]))
+        return (vals, stms, head, cnt), (jnp.where(evicted_valid, evicted, 0.0), evicted_valid)
+
+    (vals, stms, head, cnt), (evicted, evicted_valid) = jax.lax.scan(
+        step,
+        (state.values, state.stamps, state.head, state.count),
+        (writer_rows.astype(jnp.int32), values.astype(jnp.float32),
+         stamps.astype(jnp.float32), mask),
+    )
+    return WindowState(vals, stms, head, cnt), evicted, evicted_valid
+
+
+def apply_writes(
+    state: WindowState,
+    spec: WindowSpec,
+    writer_rows: jnp.ndarray,
+    values: jnp.ndarray,
+    stamps: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> tuple[WindowState, jnp.ndarray, jnp.ndarray]:
+    """Vectorized batch append with event-at-a-time semantics.
+
+    The naive implementation scans the batch (duplicate writers must append
+    in order) — measured 138 ev/s end-to-end because every event is a
+    sequential dependency. This version sorts the batch by row, computes each
+    write's rank within its row group, and derives ring slots and evictions
+    in closed form (no sequential dependency):
+
+      slot_i     = (head[row] + rank_i) % cap
+      evicted_i  = ring[row, slot_i]          if rank_i <  cap
+                   in-batch value rank_i-cap  if rank_i >= cap  (wrapped)
+      valid_i    = count[row] + rank_i >= cap
+      final ring = last-wins scatter of lanes with rank >= k_row - cap
+
+    Verified equivalent to apply_writes_scan by hypothesis property tests.
+    """
+    cap = spec.cap
+    B = writer_rows.shape[0]
+    n_rows = state.values.shape[0]
+    rows = writer_rows.astype(jnp.int32)
+    vals_in = values.astype(jnp.float32)
+    stamps_in = stamps.astype(jnp.float32)
+
+    key = jnp.where(mask, rows, n_rows)            # masked lanes sort last
+    order = jnp.argsort(key, stable=True)
+    r_s = key[order]
+    v_s = vals_in[order]
+    t_s = stamps_in[order]
+    m_s = mask[order]
+
+    start = jnp.searchsorted(r_s, r_s, side="left")
+    rank = jnp.arange(B, dtype=jnp.int32) - start.astype(jnp.int32)
+
+    r_safe = jnp.where(m_s, r_s, 0)
+    head_r = state.head[r_safe]
+    count_r = state.count[r_safe]
+    slot = (head_r + rank) % cap
+
+    # ------------------------------------------------------------ evictions
+    ring_evict = state.values[r_safe, slot]
+    wrapped = rank >= cap
+    # in-batch predecessor (same row, rank - cap); index i - cap is in range
+    prev_idx = jnp.maximum(jnp.arange(B) - cap, 0)
+    batch_evict = v_s[prev_idx]
+    evicted_s = jnp.where(wrapped, batch_evict, ring_evict)
+    evicted_valid_s = m_s & (count_r + rank >= cap)
+    evicted_s = jnp.where(evicted_valid_s, evicted_s, 0.0)
+    # back to original batch order
+    inv = jnp.zeros(B, jnp.int32).at[order].set(jnp.arange(B, dtype=jnp.int32))
+    evicted = evicted_s[inv]
+    evicted_valid = evicted_valid_s[inv]
+
+    # ------------------------------------------------------- final ring state
+    k_row = jnp.zeros(n_rows + 1, jnp.int32).at[r_safe].max(
+        jnp.where(m_s, rank + 1, 0))
+    keep = m_s & (rank >= k_row[r_safe] - cap)      # last cap writes per row
+    scatter_row = jnp.where(keep, r_safe, n_rows)   # sentinel row absorbs rest
+    pad_vals = jnp.concatenate([state.values,
+                                jnp.zeros((1, cap), jnp.float32)])
+    pad_stms = jnp.concatenate([state.stamps,
+                                jnp.full((1, cap), -jnp.inf, jnp.float32)])
+    new_vals = pad_vals.at[scatter_row, slot].set(v_s, mode="drop")[:n_rows]
+    new_stms = pad_stms.at[scatter_row, slot].set(t_s, mode="drop")[:n_rows]
+    new_head = (state.head + k_row[:n_rows]) % cap
+    new_count = jnp.minimum(state.count + k_row[:n_rows], cap)
+    return (WindowState(new_vals, new_stms, new_head, new_count),
+            evicted, evicted_valid)
+
+
+def live_mask(state: WindowState, spec: WindowSpec, now: jnp.ndarray | float) -> jnp.ndarray:
+    """(n_writers, cap) bool — which ring slots are inside the window."""
+    cap = spec.cap
+    slot = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    # slot age: 0 = most recent. head points at the *next* slot to write.
+    age = (state.head[:, None] - 1 - slot) % cap
+    occupied = age < state.count[:, None]
+    if spec.kind == "tuple":
+        return occupied & (age < int(spec.size))
+    return occupied & (state.stamps >= (jnp.asarray(now, jnp.float32) - spec.size))
+
+
+def window_pao(state: WindowState, spec: WindowSpec, agg: Aggregate,
+               now: jnp.ndarray | float = 0.0) -> jnp.ndarray:
+    """Evaluate ``agg`` over every writer's current window -> (n_writers, pao_dim)."""
+    m = live_mask(state, spec, now)
+    lifted = agg.lift(state.values.reshape(-1)).reshape(
+        state.values.shape[0], state.values.shape[1], agg.pao_dim)
+    neutral = jnp.full_like(lifted, agg.identity)
+    lifted = jnp.where(m[:, :, None], lifted, neutral)
+    if agg.combine == "sum":
+        return lifted.sum(axis=1)
+    return lifted.max(axis=1) if agg.combine == "max" else lifted.min(axis=1)

@@ -1,0 +1,181 @@
+"""Reader-partitioned distributed EAGr execution (paper §7's parallelization).
+
+The paper sketches the distribution strategy: "readers can be partitioned in
+a disjoint fashion over a set of machines, and for each machine, an overlay
+can be constructed for the readers assigned to that machine; the writes for
+each writer would be sent to all the machines where they are needed."
+
+Mapping to JAX/TPU:
+  * readers are hash-partitioned over the (pod, data) mesh axes,
+  * each shard holds the *sub-overlay closure* of its readers (writers +
+    partial aggregation nodes reachable backwards from its readers) as a
+    leveled CSR plan — plans differ per shard, so execution uses shard_map
+    with per-shard constants baked into one jitted program via a stacked,
+    padded plan representation,
+  * a write batch is relevant to every shard that consumes the writer: the
+    batch is replicated (= the all-gather the paper describes; on TPU this is
+    one small all-gather of the write ids/values, overlapped by XLA with the
+    level-0 segment ops),
+  * reads are shard-local (each reader lives on exactly one shard).
+
+For realistic deployments the write batch (ids + values) is tiny compared to
+the partial-aggregate state, exactly as the paper argues.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregates import Aggregate
+from repro.core.dataflow import PULL, PUSH
+from repro.core.engine import ExecPlan, compile_plan
+from repro.core.overlay import Overlay
+
+
+@dataclasses.dataclass
+class ShardedOverlay:
+    """Host-side partition of an overlay into per-shard closures."""
+
+    shards: list[Overlay]
+    shard_decisions: list[np.ndarray]
+    reader_shard: dict[int, int]          # base reader id -> shard
+    shard_plans: list[ExecPlan]
+    writer_rows: list[dict[int, int]]     # per shard: base writer -> local row
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def replication_factor(self) -> float:
+        """Avg #shards a writer is replicated to (paper's write fan-out)."""
+        from collections import Counter
+        c = Counter()
+        for rows in self.writer_rows:
+            for w in rows:
+                c[w] += 1
+        return float(np.mean(list(c.values()))) if c else 0.0
+
+
+def partition_overlay(overlay: Overlay, decisions: np.ndarray,
+                      n_shards: int, seed: int = 0) -> ShardedOverlay:
+    """Hash-partition readers; carve each shard's backward closure."""
+    rng = np.random.default_rng(seed)
+    readers = overlay.reader_nodes()
+    shard_of_reader = {r: int(h) for r, h in zip(
+        readers, rng.integers(0, n_shards, len(readers)))}
+
+    out_edges = overlay.out_edges()  # noqa: F841  (kept for clarity)
+    shards, shard_decs, plans, writer_rows = [], [], [], []
+    reader_shard = {}
+    for s in range(n_shards):
+        keep = np.zeros(overlay.n_nodes, dtype=bool)
+        stack = [r for r in readers if shard_of_reader[r] == s]
+        for r in stack:
+            keep[r] = True
+            reader_shard[overlay.origin[r]] = s
+        while stack:
+            v = stack.pop()
+            for src, _ in overlay.in_edges[v]:
+                if not keep[src]:
+                    keep[src] = True
+                    stack.append(src)
+        remap = {}
+        sub = Overlay(kinds=[], origin=[], in_edges=[],
+                      dup_insensitive=overlay.dup_insensitive)
+        for v in range(overlay.n_nodes):
+            if keep[v]:
+                kind = overlay.kinds[v]
+                if kind == "R" and shard_of_reader.get(v, -1) != s:
+                    kind = "I"  # another shard's reader pulled in as interior
+                remap[v] = sub.add_node(kind, overlay.origin[v])
+        dec = []
+        for v in range(overlay.n_nodes):
+            if keep[v]:
+                for src, sign in overlay.in_edges[v]:
+                    sub.add_edge(remap[src], remap[v], sign)
+                dec.append(decisions[v])
+        sub = sub.pruned()
+        # pruning may drop nodes; recompute decisions on the pruned overlay by
+        # rebuilding the remap through origin/kind alignment: simplest is to
+        # re-run partitioning without pruning; instead keep unpruned sub.
+        shards.append(sub)
+        # align decisions with pruned overlay via greedy re-derivation:
+        # push nodes whose all-inputs-push invariants must hold; reuse the
+        # original decision for surviving nodes by matching origins where
+        # possible, defaulting interior nodes to PUSH.
+        shard_decs.append(_project_decisions(overlay, decisions, sub))
+        plan = compile_plan(sub, shard_decs[-1])
+        plans.append(plan)
+        writer_rows.append(plan.writer_row_of_base)
+    return ShardedOverlay(shards=shards, shard_decisions=shard_decs,
+                          reader_shard=reader_shard, shard_plans=plans,
+                          writer_rows=writer_rows)
+
+
+def _project_decisions(full: Overlay, decisions: np.ndarray,
+                       sub: Overlay) -> np.ndarray:
+    """Project dataflow decisions onto a shard's sub-overlay.
+
+    Writers stay PUSH. For interior/reader nodes we match by the node's
+    input-writer set signature (unique within one overlay construction)."""
+    full_sets = full.input_writer_sets()
+    sig_dec: dict[frozenset, int] = {}
+    for v in range(full.n_nodes):
+        if full.kinds[v] != "W":
+            sig_dec.setdefault(frozenset(full_sets[v]), int(decisions[v]))
+    dec = np.zeros(sub.n_nodes, dtype=np.int64)
+    sub_sets = sub.input_writer_sets()
+    for v in range(sub.n_nodes):
+        if sub.kinds[v] == "W":
+            dec[v] = PUSH
+        else:
+            dec[v] = sig_dec.get(frozenset(sub_sets[v]), PULL)
+    # enforce the push/pull frontier invariant (no pull upstream of a push)
+    order = sub.toposort()
+    for v in order:
+        if dec[v] == PUSH and any(dec[s] == PULL for s, _ in sub.in_edges[v]):
+            dec[v] = PULL
+    return dec
+
+
+def shard_write_batch(sharded: ShardedOverlay, base_ids: np.ndarray,
+                      values: np.ndarray):
+    """Route one global write batch to every shard that consumes the writer
+    (host-side; the device-side equivalent is the all-gather of the batch).
+    Returns per-shard (rows, vals, mask) padded to the global batch size."""
+    B = len(base_ids)
+    out = []
+    for s in range(sharded.n_shards):
+        rows = np.zeros(B, np.int32)
+        vals = np.zeros(B, np.float32)
+        mask = np.zeros(B, bool)
+        wr = sharded.writer_rows[s]
+        j = 0
+        for b, v in zip(base_ids, values):
+            row = wr.get(int(b))
+            if row is not None:
+                rows[j], vals[j], mask[j] = row, v, True
+                j += 1
+        out.append((rows, vals, mask))
+    return out
+
+
+def shard_read_batch(sharded: ShardedOverlay, base_ids: np.ndarray):
+    """Route reads to their unique owner shard (padded per shard)."""
+    B = len(base_ids)
+    out = []
+    for s in range(sharded.n_shards):
+        nodes = np.zeros(B, np.int32)
+        mask = np.zeros(B, bool)
+        plan = sharded.shard_plans[s]
+        j = 0
+        for b in base_ids:
+            if sharded.reader_shard.get(int(b)) == s:
+                nodes[j] = plan.reader_node_of_base[int(b)]
+                mask[j] = True
+                j += 1
+        out.append((nodes, mask))
+    return out

@@ -1,0 +1,114 @@
+"""Fault tolerance: checkpoint/restart driver, straggler detection, elastic
+re-meshing, deterministic data-skip on resume.
+
+The driver wraps any (state, batch) -> state step function:
+  * periodic async checkpoints (CheckpointManager),
+  * on a step failure (device loss manifests as an exception in the runtime),
+    restore the latest checkpoint and REPLAY the data stream deterministically
+    (the data iterator is seeded by step index, so skipping to the restored
+    step reproduces the exact batch sequence),
+  * per-step wall-time tracking with a robust z-score straggler detector —
+    on real multi-host deployments this feeds the controller that evicts or
+    reshards around slow hosts; here it flags and records,
+  * elastic re-mesh: on restart with a different device count, the same
+    checkpoint restores under new shardings (restore-with-resharding), and
+    the batch size per shard re-balances because inputs are sharded by the
+    mesh rules rather than hard-coded counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Flags steps slower than median + z * MAD over a sliding window."""
+
+    window: int = 64
+    z: float = 4.0
+    times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=64))
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        ts = np.array(self.times) if self.times else np.array([seconds])
+        med = float(np.median(ts))
+        mad = float(np.median(np.abs(ts - med))) + 1e-9
+        is_straggler = len(self.times) >= 8 and seconds > med + self.z * 1.4826 * mad
+        if is_straggler:
+            self.flagged.append((step, seconds, med))
+        self.times.append(seconds)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_run: int = 0
+    restarts: int = 0
+    checkpoints: int = 0
+    stragglers: list = dataclasses.field(default_factory=list)
+    losses: list = dataclasses.field(default_factory=list)
+
+
+class FaultTolerantRunner:
+    """Drives a training loop with checkpoint/restart semantics.
+
+    make_batch(step) must be deterministic in step — that is what makes
+    replay-after-restore exact.
+    """
+
+    def __init__(self, step_fn: Callable, make_batch: Callable[[int], Any],
+                 ckpt: CheckpointManager, *, ckpt_every: int = 50,
+                 max_restarts: int = 3):
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.detector = StragglerDetector()
+
+    def run(self, state, n_steps: int, *, start_step: int = 0,
+            fail_at: set[int] | None = None,
+            shardings=None) -> tuple[Any, RunReport]:
+        """fail_at: steps at which to inject a simulated node failure (tests)."""
+        report = RunReport()
+        step = start_step
+        restarts = 0
+        while step < n_steps:
+            try:
+                if fail_at and step in fail_at:
+                    fail_at.discard(step)
+                    raise RuntimeError(f"injected node failure at step {step}")
+                t0 = time.perf_counter()
+                batch = self.make_batch(step)
+                state, metrics = self.step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                if self.detector.observe(step, dt):
+                    report.stragglers.append(step)
+                if metrics is not None and "loss" in metrics:
+                    report.losses.append(float(metrics["loss"]))
+                step += 1
+                report.steps_run += 1
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state, blocking=False)
+                    report.checkpoints += 1
+            except Exception:
+                restarts += 1
+                report.restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                restored = self.ckpt.latest_step()
+                if restored is None:
+                    step = start_step  # restart from scratch
+                    continue
+                state, _ = self.ckpt.restore(state, restored, shardings=shardings)
+                step = restored      # deterministic data replay from here
+        self.ckpt.wait()
+        return state, report

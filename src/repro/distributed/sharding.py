@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto the production mesh.
+
+Every parameter/input declares *logical* axis names (ParamSpec.axes); a rule
+table maps logical names to mesh axes. ``data`` composes with ``pod`` for all
+data-parallel dims so the same rules serve the single-pod (16, 16) and
+multi-pod (2, 16, 16) meshes.
+
+Divisibility guard: a mesh axis is only applied to a dim it divides evenly —
+otherwise that axis is dropped (replicated) for that dim. GSPMD could pad
+uneven shards, but silent padding skews the roofline byte counts; explicit
+replication keeps the analysis honest and is recorded by ``explain_sharding``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+# logical axis -> mesh axes (in priority order; tuples compose)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # params
+    "embed": ("pod", "data"),       # FSDP: shard the d_model dim over data
+    "vocab": ("model",),            # TP: vocab/embedding rows
+    "heads": ("model",),            # TP: attention heads
+    "kv_heads": ("model",),
+    "mlp": ("model",),              # TP: FFN hidden
+    "expert": ("model",),           # EP: MoE experts
+    "layers": (),                   # scan axis: never sharded
+    # activations / inputs (act_* names are used by constrain() in model code)
+    "batch": ("pod", "data"),
+    "sequence": (),                 # sequence parallelism opt-in via seq rules
+    # graph node/edge dims never feed TP matmuls -> use the model axis too
+    "nodes": ("pod", "data", "model"),
+    "edges": ("pod", "data", "model"),
+    "candidates": ("pod", "data", "model"),
+    "cache_seq": ("pod", "data", "model"),  # KV cache seq: whatever batch left
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_res_seq": (),              # residual stream between layers (SP opt-in)
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_nodes": ("pod", "data", "model"),
+    "act_edges": ("pod", "data", "model"),
+}
+
+# variant used by the sequence-parallel hillclimb (prefill shapes)
+SEQPAR_RULES = {**DEFAULT_RULES, "sequence": ("model",), "act_seq": ("model",),
+                "act_heads": (), "act_mlp": (), "act_vocab": ()}
+
+# Megatron-style sequence parallelism on the residual stream only: layer
+# boundaries (and therefore remat-saved activations) are sequence-sharded over
+# the model axis; attention/FFN internals stay head/mlp-sharded. GSPMD inserts
+# the all-gather (entering a layer) / reduce-scatter (leaving it) pair.
+RESIDUAL_SP_RULES = {**DEFAULT_RULES, "act_res_seq": ("model",)}
+
+RULE_SETS = {"default": DEFAULT_RULES, "seqpar": SEQPAR_RULES,
+             "residual_sp": RESIDUAL_SP_RULES}
+
+
+# ------------------------------------------------------- activation context
+# Model code calls constrain(x, axes) with logical names; outside a context
+# (smoke tests, single-device examples) it is a no-op, so models never depend
+# on a mesh being present.
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axis names (no-op without context)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@contextlib.contextmanager
+def no_constrain():
+    """Disable constrain() — required inside shard_map bodies, where arrays
+    are per-shard locals and global sharding constraints are meaningless."""
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = None
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[str | None, ...], mesh: Mesh,
+             rules: dict[str, tuple[str, ...]] | None = None) -> P:
+    """PartitionSpec for one array: apply rules with divisibility guard."""
+    rules = rules or DEFAULT_RULES
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        if name is None or name not in rules:
+            out.append(None)
+            continue
+        chosen = []
+        prod = 1
+        for ax in rules[name]:
+            if ax not in sizes or ax in used:
+                continue
+            if dim % (prod * sizes[ax]) == 0:
+                chosen.append(ax)
+                prod *= sizes[ax]
+        used.update(chosen)
+        out.append(tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None))
+    return P(*out)
+
+
+def sharding_for(shape, axes, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def param_shardings(spec_tree, mesh: Mesh, rules=None):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: sharding_for(s.shape, s.axes, mesh, rules),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def like_tree(sds_tree, axes_fn, mesh, rules=None):
+    """Shardings for a ShapeDtypeStruct tree given axes_fn(path, sds) -> axes."""
+    def f(path, sds):
+        return sharding_for(sds.shape, axes_fn(path, sds), mesh, rules)
+    return jax.tree_util.tree_map_with_path(f, sds_tree)
+
+
+def batch_shardings(sds_tree, mesh: Mesh, rules=None, *, leading="batch"):
+    """Shard the leading dim of every array by the ``leading`` logical axis."""
+    def f(sds):
+        axes = (leading,) + (None,) * (len(sds.shape) - 1)
+        return sharding_for(sds.shape, axes, mesh, rules)
+    return jax.tree.map(f, sds_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def explain_sharding(spec_tree, mesh, rules=None, max_rows: int = 0) -> str:
+    """Human-readable table of param shardings + per-device bytes."""
+    rows = []
+    total = 0
+
+    def visit(path, s: ParamSpec):
+        nonlocal total
+        ps = spec_for(s.shape, s.axes, mesh, rules)
+        n_shards = 1
+        sizes = mesh_axis_sizes(mesh)
+        for entry in ps:
+            for ax in (entry if isinstance(entry, tuple) else (entry,) if entry else ()):
+                n_shards *= sizes[ax]
+        nbytes = int(jnp.dtype(s.dtype).itemsize)
+        for d in s.shape:
+            nbytes *= d
+        per_dev = nbytes // n_shards
+        total += per_dev
+        rows.append((jax.tree_util.keystr(path), s.shape, str(ps), per_dev))
+
+    jax.tree_util.tree_map_with_path(
+        visit, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = [f"{p}  {sh}  {ps}  {b/1e6:.1f}MB" for p, sh, ps, b in rows[:max_rows or len(rows)]]
+    out.append(f"TOTAL per-device param bytes: {total/1e9:.2f} GB")
+    return "\n".join(out)

@@ -1,0 +1,17 @@
+from repro.graphs.csr import CSRGraph
+from repro.graphs.generators import (
+    rmat_graph,
+    erdos_graph,
+    cora_like_graph,
+    small_example_graph,
+)
+from repro.graphs.sampler import NeighborSampler
+
+__all__ = [
+    "CSRGraph",
+    "rmat_graph",
+    "erdos_graph",
+    "cora_like_graph",
+    "small_example_graph",
+    "NeighborSampler",
+]

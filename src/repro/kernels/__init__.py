@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot spots:
+#   segment_agg     sorted-segment reduce (EAGr overlay levels, GNN message agg)
+#   embedding_bag   fused gather + segment-sum over embedding tables (recsys)
+#   flash_attention blockwise causal GQA attention (LM prefill) + decode
+# Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper), ref.py (pure-jnp oracle). Validated with interpret=True on CPU;
+# BlockSpecs are sized for TPU v5e VMEM (~16 MiB) and MXU 128-alignment.

@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag", "embedding_bag_ref"]

@@ -1,0 +1,59 @@
+"""jit'd wrapper for the embedding_bag kernel.
+
+Accepts the torch-style (ids, offsets) calling convention with dynamic
+runtime ids. All plan quantities the kernel needs (per-id bag index, first-
+of-bag flags) are computed with jnp ops and scalar-prefetched, so the whole
+wrapper jits. Every bag is guaranteed coverage by appending one zero-weight
+sentinel id per bag (empty bags then produce exact zeros, matching torch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import D_BLK, embedding_bag_call
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret", "use_kernel"))
+def embedding_bag(
+    table: jnp.ndarray,                 # (V, D)
+    ids: jnp.ndarray,                   # (E,) int32; entries < 0 are padding
+    offsets: jnp.ndarray,               # (n_bags,) int32 start offset per bag
+    *,
+    n_bags: int,
+    weights: jnp.ndarray | None = None, # (E,) fp32
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Sum-mode EmbeddingBag: out[b] = sum_{i in bag b} w_i * table[ids[i]]."""
+    E = ids.shape[0]
+    D = table.shape[1]
+    bags = jnp.searchsorted(offsets, jnp.arange(E, dtype=offsets.dtype), side="right") - 1
+    valid = ids >= 0
+    w = jnp.where(valid, 1.0 if weights is None else weights, 0.0).astype(jnp.float32)
+
+    if not use_kernel:
+        from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+        return embedding_bag_ref(table, ids, bags.astype(jnp.int32), n_bags, weights=w)
+
+    # sentinel per bag (covers empty bags), then stable sort by bag
+    ids_all = jnp.concatenate([jnp.where(valid, ids, 0),
+                               jnp.zeros((n_bags,), ids.dtype)])
+    bags_all = jnp.concatenate([bags, jnp.arange(n_bags, dtype=bags.dtype)])
+    w_all = jnp.concatenate([w, jnp.zeros((n_bags,), jnp.float32)])
+    order = jnp.argsort(bags_all, stable=True)
+    ids_s = ids_all[order].astype(jnp.int32)
+    bags_s = bags_all[order].astype(jnp.int32)
+    w_s = w_all[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (bags_s[1:] != bags_s[:-1]).astype(jnp.int32)])
+
+    d_pad = -(-D // D_BLK) * D_BLK
+    table_p = jnp.pad(table, ((0, 0), (0, d_pad - D)))
+    out = embedding_bag_call(
+        table_p, ids_s, bags_s, first, w_s[:, None],
+        n_bags=n_bags, interpret=interpret)
+    return out[:, :D]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: EmbeddingBag = gather + weighted segment-sum.
+
+JAX has no native nn.EmbeddingBag; this jnp.take + segment_sum composition is
+the reference the Pallas kernel must match (and the path used by models when
+the kernel is off)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,    # (V, D)
+    ids: jnp.ndarray,      # (E,) int32; entries < 0 are padding
+    bags: jnp.ndarray,     # (E,) int32 bag index per id, sorted ascending
+    n_bags: int,
+    weights: jnp.ndarray | None = None,  # (E,) fp32 per-id weights
+) -> jnp.ndarray:
+    valid = ids >= 0
+    rows = jnp.take(table, jnp.where(valid, ids, 0), axis=0)
+    w = jnp.where(valid, 1.0 if weights is None else weights, 0.0)
+    rows = rows * w[:, None]
+    safe_bags = jnp.where(valid, bags, n_bags)
+    return jax.ops.segment_sum(rows, safe_bags, num_segments=n_bags + 1)[:n_bags]

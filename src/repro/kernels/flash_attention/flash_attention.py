@@ -1,0 +1,121 @@
+"""Blockwise (flash) GQA attention as a Pallas TPU kernel.
+
+Online-softmax attention with explicit VMEM tiling: the (Sq, Skv) score
+matrix never materializes; per (query-tile, kv-tile) step the kernel keeps a
+running row-max m, normalizer l, and output accumulator in VMEM scratch.
+
+  grid = (B, Hq, n_q_tiles, n_kv_tiles)     # kv minor => scratch carries
+  q tile (q_blk, d), k/v tile (k_blk, d)    # across kv steps of one q tile
+  GQA: kv head index_map = hq // (Hq//Hkv)  # grouped heads share one kv DMA
+
+Causal masking is two-level: whole kv tiles strictly above the diagonal are
+skipped with @pl.when, and the diagonal tile is masked with a broadcasted
+iota compare. Decode (Sq=1, KV cache with live length) reuses the same body
+with the scalar-prefetched per-row length mask; q is padded to 8 rows to
+respect the fp32 (8, 128) sublane tile.
+
+VMEM (fp32, q_blk=256, k_blk=512, d=128): q 128K + k/v 512K + acc 128K +
+p 512K ≈ 1.3 MiB « 16 MiB. All matmul dims 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLK = 256   # default prefill query tile
+K_BLK = 512   # default kv tile
+NEG_INF = -3.0e38
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+                 *, causal: bool, scale: float, q_blk: int, k_blk: int):
+    b = pl.program_id(0)
+    i, j = pl.program_id(2), pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = i * q_blk
+    k_first = j * k_blk
+
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (q_blk, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (k_blk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 1)
+        mask = kpos < len_ref[b]                      # live-length mask
+        if causal:
+            mask &= qpos >= kpos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                         # (q_blk, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    if causal:
+        pl.when(k_first <= q_first + q_blk - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        out_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_blk", "k_blk", "interpret")
+)
+def flash_attention_call(
+    q: jnp.ndarray,        # (B, Hq, Sq_pad, d)
+    k: jnp.ndarray,        # (B, Hkv, Skv_pad, d)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) int32 live kv length per batch row
+    *,
+    causal: bool = True,
+    q_blk: int = Q_BLK,
+    k_blk: int = K_BLK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / (d ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, Sq // q_blk, Skv // k_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, d), lambda b, h, i, j, L: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, k_blk, d), lambda b, h, i, j, L: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, k_blk, d), lambda b, h, i, j, L: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, d), lambda b, h, i, j, L: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 128), jnp.float32),  # m (lane-replicated)
+            pltpu.VMEM((q_blk, 1), jnp.float32),    # l
+            pltpu.VMEM((q_blk, d), jnp.float32),    # acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal, scale=scale,
+                          q_blk=q_blk, k_blk=k_blk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

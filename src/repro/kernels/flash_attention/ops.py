@@ -1,0 +1,55 @@
+"""jit'd wrappers: pad to tile multiples, then call the flash kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    K_BLK,
+    Q_BLK,
+    flash_attention_call,
+)
+
+
+def _pad_seq(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    S = x.shape[2]
+    pad = (-S) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_blk", "k_blk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_blk: int = Q_BLK,
+                    k_blk: int = K_BLK, interpret: bool = True) -> jnp.ndarray:
+    """Prefill attention. q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d)."""
+    B, _, Sq, _ = q.shape
+    Skv = k.shape[2]
+    q_blk = min(q_blk, max(8, Sq))
+    k_blk = min(k_blk, max(128, Skv))
+    qp = _pad_seq(q, q_blk)
+    kp = _pad_seq(k, k_blk)
+    vp = _pad_seq(v, k_blk)
+    lengths = jnp.full((B,), Skv, dtype=jnp.int32)
+    out = flash_attention_call(qp, kp, vp, lengths, causal=causal,
+                               q_blk=q_blk, k_blk=k_blk, interpret=interpret)
+    return out[:, :, :Sq, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k_blk", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, k_blk: int = K_BLK,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One-token decode. q: (B, Hq, d); caches: (B, Hkv, S, d); lengths: (B,).
+    q is padded to 8 rows (fp32 sublane tile); row 0 is the live token."""
+    B, Hq, d = q.shape
+    S = k_cache.shape[2]
+    k_blk = min(k_blk, max(128, S))
+    q4 = jnp.zeros((B, Hq, 8, d), q.dtype).at[:, :, 0, :].set(q)
+    kp = _pad_seq(k_cache, k_blk)
+    vp = _pad_seq(v_cache, k_blk)
+    out = flash_attention_call(q4, kp, vp, lengths.astype(jnp.int32),
+                               causal=False, q_blk=8, k_blk=k_blk,
+                               interpret=interpret)
+    return out[:, :, 0, :]

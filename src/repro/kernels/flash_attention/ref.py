@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for GQA attention (prefill and decode)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _expand_kv(k: jnp.ndarray, n_q_heads: int) -> jnp.ndarray:
+    """(B, Hkv, S, d) -> (B, Hq, S, d) by repeating each kv head."""
+    group = n_q_heads // k.shape[1]
+    return jnp.repeat(k, group, axis=1)
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, d); k,v: (B, Hkv, Skv, d). fp32 softmax."""
+    B, Hq, Sq, d = q.shape
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        Skv = k.shape[2]
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, k_cache, v_cache, lengths) -> jnp.ndarray:
+    """One-token decode: q (B, Hq, d); caches (B, Hkv, S, d); lengths (B,)."""
+    B, Hq, d = q.shape
+    k = _expand_kv(k_cache, Hq)
+    v = _expand_kv(v_cache, Hq)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(k.shape[2])[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

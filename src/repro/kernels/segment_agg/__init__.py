@@ -1,0 +1,4 @@
+from repro.kernels.segment_agg.ops import SegmentPlan, make_plan, segment_agg
+from repro.kernels.segment_agg.ref import segment_agg_ref
+
+__all__ = ["SegmentPlan", "make_plan", "segment_agg", "segment_agg_ref"]

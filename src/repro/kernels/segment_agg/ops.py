@@ -1,0 +1,120 @@
+"""jit'd wrapper for the segment_agg kernel.
+
+The kernel requires edges sorted by destination and padded so no E_BLK edge
+block straddles an R_BLK row tile. For static graph structure (GNN adjacency,
+EAGr overlay levels) that plan is built once on the host (``make_plan``) and
+reused every step; only the edge *values* are runtime data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_agg.segment_agg import (
+    E_BLK,
+    F_BLK,
+    R_BLK,
+    segment_agg_call,
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash, so a
+class SegmentPlan:                             # plan can be a static jit arg
+    """Host-compiled routing plan for one static (seg, n_rows) structure."""
+
+    perm: np.ndarray            # (E,) original edge -> slot in padded layout
+    seg_padded: np.ndarray      # (E_pad,) int32, -1 padding
+    tile_of_block: np.ndarray   # (n_edge_blocks,) int32
+    first_of_tile: np.ndarray   # (n_edge_blocks,) int32
+    n_rows: int
+    n_row_tiles: int
+    e_pad: int
+
+    @property
+    def pad_overhead(self) -> float:
+        return self.e_pad / max(1, len(self.perm)) - 1.0
+
+
+def make_plan(seg: np.ndarray, n_rows: int) -> SegmentPlan:
+    """Group edges by row tile, pad each tile's edge count to a multiple of
+    E_BLK, and record block->tile routing for the scalar-prefetch index maps."""
+    seg = np.asarray(seg, dtype=np.int64)
+    order = np.argsort(seg, kind="stable")
+    n_row_tiles = max(1, -(-n_rows // R_BLK))
+
+    tile = seg[order] // R_BLK
+    slots = []
+    seg_chunks = []
+    tob, fot = [], []
+    e_cursor = 0
+    for t in range(n_row_tiles):
+        idx = order[tile == t]
+        if idx.size == 0:
+            continue
+        n_blocks = -(-idx.size // E_BLK)
+        padded = n_blocks * E_BLK
+        slots.append((idx, e_cursor))
+        chunk = np.full(padded, -1, dtype=np.int32)
+        chunk[: idx.size] = seg[idx]
+        seg_chunks.append(chunk)
+        tob.extend([t] * n_blocks)
+        fot.extend([1] + [0] * (n_blocks - 1))
+        e_cursor += padded
+    if e_cursor == 0:  # no edges at all: one dummy block routed to tile 0
+        seg_chunks.append(np.full(E_BLK, -1, dtype=np.int32))
+        tob, fot = [0], [1]
+        e_cursor = E_BLK
+
+    perm = np.zeros(len(seg), dtype=np.int64)
+    for idx, base in slots:
+        perm[idx] = base + np.arange(idx.size)
+    return SegmentPlan(
+        perm=perm,
+        seg_padded=np.concatenate(seg_chunks),
+        tile_of_block=np.asarray(tob, dtype=np.int32),
+        first_of_tile=np.asarray(fot, dtype=np.int32),
+        n_rows=n_rows,
+        n_row_tiles=n_row_tiles,
+        e_pad=e_cursor,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "op", "interpret"))
+def _run(plan: SegmentPlan, x: jnp.ndarray, op: str, interpret: bool) -> jnp.ndarray:
+    E, F = x.shape
+    f_pad = -(-F // F_BLK) * F_BLK
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, f_pad - F)))
+    xp = jnp.zeros((plan.e_pad, f_pad), dtype=jnp.float32)
+    xp = xp.at[jnp.asarray(plan.perm)].set(xf)
+    out = segment_agg_call(
+        xp,
+        jnp.asarray(plan.seg_padded),
+        jnp.asarray(plan.tile_of_block),
+        jnp.asarray(plan.first_of_tile),
+        n_row_tiles=plan.n_row_tiles,
+        n_feat_tiles=f_pad // F_BLK,
+        op=op,
+        interpret=interpret,
+    )
+    out = out[: plan.n_rows, :F]
+    if op == "max":
+        visited = jax.ops.segment_sum(
+            jnp.ones((plan.e_pad,), jnp.float32),
+            jnp.where(jnp.asarray(plan.seg_padded) >= 0,
+                      jnp.asarray(plan.seg_padded), plan.n_rows),
+            num_segments=plan.n_rows + 1)[: plan.n_rows]
+        out = jnp.where(visited[:, None] > 0, out, 0.0)
+    return out
+
+
+def segment_agg(x: jnp.ndarray, plan: SegmentPlan, *, op: str = "sum",
+                interpret: bool = True) -> jnp.ndarray:
+    """Aggregate edge values x (E, F) by the plan's destination rows.
+    Returns (n_rows, F) fp32. Rows with no edges are 0 (both ops)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    return _run(plan, x, op, interpret)

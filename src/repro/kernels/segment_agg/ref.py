@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for sorted-segment aggregation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_agg_ref(x: jnp.ndarray, seg: jnp.ndarray, n_rows: int, op: str = "sum") -> jnp.ndarray:
+    """x: (E, F) edge values; seg: (E,) destination rows (entries < 0 are
+    padding and contribute nothing). Returns (n_rows, F)."""
+    valid = seg >= 0
+    safe = jnp.where(valid, seg, n_rows)  # park padding on a scratch row
+    if op == "sum":
+        x = jnp.where(valid[:, None], x, 0.0)
+        out = jax.ops.segment_sum(x, safe, num_segments=n_rows + 1)
+    elif op == "max":
+        x = jnp.where(valid[:, None], x, -jnp.inf)
+        out = jax.ops.segment_max(x, safe, num_segments=n_rows + 1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(op)
+    return out[:n_rows]

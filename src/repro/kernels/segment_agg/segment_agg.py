@@ -1,0 +1,114 @@
+"""Sorted-segment aggregation as a Pallas TPU kernel.
+
+TPU has no atomic scatter; the systolic array *is* the scatter engine when
+reduce-by-key is expressed as a small matmul. Edges arrive sorted by
+destination row and padded (host-side, see ops.py) so that **no edge block
+straddles a row-tile boundary**. Then:
+
+  grid = (n_feat_tiles, n_edge_blocks)           # edge blocks minor => all
+                                                 # revisits of an output tile
+                                                 # are consecutive
+  P[i, e] = 1  iff  seg[e] == tile_row0 + i      # (R_BLK, E_BLK) one-hot
+  out_tile += P @ x_block                        # MXU matmul, fp32 accum
+
+The block->tile routing (``tile_of_block``) and the first-visit flags are
+scalar-prefetched (PrefetchScalarGridSpec) so the output BlockSpec's
+index_map can read them — the TPU DMA engine then streams each edge block to
+the right output tile with no host involvement.
+
+The 'max' variant replaces the matmul with masked-broadcast maxima over
+E_SUB-edge sub-chunks (VPU), keeping the (R, E_SUB, F) intermediate in VMEM.
+
+VMEM working set (fp32, E_BLK=256, R_BLK=128, F_BLK=128):
+  x 128 KiB + out 64 KiB + seg 1 KiB + one-hot 128 KiB  ≈  0.4 MiB  « 16 MiB.
+All matmul dims are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+E_BLK = 256     # edges per block
+R_BLK = 128     # output rows per tile (MXU-aligned)
+F_BLK = 128     # feature lanes per tile
+E_SUB = 8       # sub-chunk for the max variant (bounds the (R,E_SUB,F) bcast)
+
+
+def _sum_kernel(tob_ref, fot_ref, seg_ref, x_ref, out_ref):
+    b = pl.program_id(1)
+
+    @pl.when(fot_ref[b] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row0 = tob_ref[b] * R_BLK
+    seg = seg_ref[...]  # (E_BLK,) int32; padding = -1
+    local = seg - row0
+    # one-hot scatter matrix on the MXU: (R_BLK, E_BLK) @ (E_BLK, F_BLK)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (R_BLK, E_BLK), 0)
+    p = (rows == local[None, :]).astype(jnp.float32)
+    out_ref[...] += jax.lax.dot(
+        p, x_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def _max_kernel(tob_ref, fot_ref, seg_ref, x_ref, out_ref):
+    b = pl.program_id(1)
+    neg = jnp.float32(-3.0e38)
+
+    @pl.when(fot_ref[b] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, neg)
+
+    row0 = tob_ref[b] * R_BLK
+    local = seg_ref[...] - row0
+    x = x_ref[...].astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (R_BLK, E_SUB), 0)
+
+    def body(c, acc):
+        sl = jax.lax.dynamic_slice_in_dim(local, c * E_SUB, E_SUB)
+        xs = jax.lax.dynamic_slice_in_dim(x, c * E_SUB, E_SUB, axis=0)
+        hit = rows == sl[None, :]                       # (R_BLK, E_SUB)
+        vals = jnp.where(hit[:, :, None], xs[None, :, :], neg)
+        return jnp.maximum(acc, vals.max(axis=1))
+
+    out_ref[...] = jax.lax.fori_loop(0, E_BLK // E_SUB, body, out_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_row_tiles", "n_feat_tiles", "op", "interpret")
+)
+def segment_agg_call(
+    x: jnp.ndarray,              # (E_pad, F_pad), blocked-by-tile order
+    seg: jnp.ndarray,            # (E_pad,) int32, sorted, padding = -1
+    tile_of_block: jnp.ndarray,  # (n_edge_blocks,) int32
+    first_of_tile: jnp.ndarray,  # (n_edge_blocks,) int32 (1 = first block of tile)
+    *,
+    n_row_tiles: int,
+    n_feat_tiles: int,
+    op: str = "sum",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n_edge_blocks = x.shape[0] // E_BLK
+    kernel = _sum_kernel if op == "sum" else _max_kernel
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_feat_tiles, n_edge_blocks),
+        in_specs=[
+            pl.BlockSpec((E_BLK,), lambda f, b, tob, fot: (b,)),          # seg
+            pl.BlockSpec((E_BLK, F_BLK), lambda f, b, tob, fot: (b, f)),  # x
+        ],
+        out_specs=pl.BlockSpec((R_BLK, F_BLK), lambda f, b, tob, fot: (tob[b], f)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_row_tiles * R_BLK, n_feat_tiles * F_BLK), jnp.float32
+        ),
+        interpret=interpret,
+    )(tile_of_block, first_of_tile, seg, x)

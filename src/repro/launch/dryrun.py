@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes and record memory/cost/collective analysis.
+#
+# The XLA_FLAGS line above MUST run before any other import (jax locks the
+# device count at first init); this module is the only place it is set.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun                # all 40 cells
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 512-chip mesh
+#   PYTHONPATH=src python -m repro.launch.dryrun --rules seqpar # rule preset
+#   PYTHONPATH=src python -m repro.launch.dryrun --json out.json
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum operand bytes of every collective op in the (per-device) HLO,
+    multiplying ops inside while-loop bodies by the loop trip count
+    (composed across nested loops)."""
+    import re
+
+    DT = {"f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "pred": 1,
+          "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    comps = _computation_blocks(hlo_text)
+    mult = _effective_multipliers(comps)
+    out = {k: 0.0 for k in kinds}
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 1.0)
+        for ls in lines:
+            m = re.match(r".*= \S+ (all-gather|all-reduce|reduce-scatter|"
+                         r"all-to-all|collective-permute)(?:-start)?\(", ls)
+            if not m:
+                continue
+            kind = m.group(1)
+            shapes = re.findall(r"(f32|bf16|s32|u32|f16|pred|s8|u8|f64|s64|u64)"
+                                r"\[([0-9,]*)\]", ls.split("=")[1].split("(")[0])
+            nbytes = 0
+            for dt, dims in shapes:
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * DT[dt]
+            out[kind] += nbytes * m_comp
+    return out
+
+
+def _computation_blocks(hlo_text: str) -> dict[str, list[str]]:
+    """Split HLO text into named computation blocks (top-level defs)."""
+    import re
+
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{", raw)
+        if m and not raw.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(raw.strip())
+    return comps
+
+
+def _effective_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Per-computation execution multipliers: a while body runs trip-count
+    times per execution of the computation containing the while op; nested
+    loops compose. Trip count = the largest s32[] constant in the condition
+    computation (jax scans compare the induction var with direction=LT)."""
+    import re
+
+    # condition computation -> trip bound
+    cond_bound: dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = [int(x) for ls in lines
+                  for x in re.findall(r"s32\[\]\s+constant\((\d+)\)", ls)]
+        has_lt = any("direction=LT" in ls for ls in lines) or any(
+            "wrapped_compare" in ls or "compare" in ls for ls in lines)
+        if consts and has_lt:
+            cond_bound[name] = max(consts)
+
+    # edges: computation -> (body, trip) for every while op it contains
+    edges: dict[str, list[tuple[str, float]]] = {n: [] for n in comps}
+    wre = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+    # also follow plain calls/fusions with multiplier 1
+    cre = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+    for name, lines in comps.items():
+        for ls in lines:
+            wm = wre.search(ls)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                edges[name].append((body, float(cond_bound.get(cond, 1))))
+                edges[name].append((cond, float(cond_bound.get(cond, 1))))
+                continue
+            for callee in cre.findall(ls):
+                if callee in comps:
+                    edges[name].append((callee, 1.0))
+
+    # propagate from roots (computations never referenced = ENTRY and friends)
+    referenced = {b for outs in edges.values() for b, _ in outs}
+    mult = {n: 1.0 for n in comps if n not in referenced}
+    # BFS (computation call graph is a DAG)
+    frontier = list(mult)
+    while frontier:
+        nxt = []
+        for n in frontier:
+            for b, t in edges.get(n, ()):  # accumulate; callee may be shared
+                m_new = mult[n] * t
+                if mult.get(b, 0.0) < m_new:
+                    mult[b] = m_new
+                    nxt.append(b)
+        frontier = nxt
+    return mult
+
+
+def run_cell(arch_id: str, shape: str, mesh, rules_name: str | None,
+             unroll: bool = False):
+    from repro.configs import get_arch
+    from repro.distributed.sharding import RULE_SETS
+
+    rules = RULE_SETS[rules_name] if rules_name else None
+    arch = get_arch(arch_id)
+    t0 = time.time()
+    plan = arch.build(shape, mesh, rules, unroll=unroll)
+    lowered = plan.lower(mesh)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec = dict(
+        arch=arch_id, shape=shape,
+        mesh=dict(zip(mesh.axis_names, mesh.devices.shape)),
+        seconds=round(time.time() - t0, 1),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        arg_bytes=int(ma.argument_size_in_bytes),
+        out_bytes=int(ma.output_size_in_bytes),
+        alias_bytes=int(ma.alias_size_in_bytes),
+        flops=float(ca.get("flops", -1.0)),
+        bytes_accessed=float(ca.get("bytes accessed", -1.0)),
+        collective_bytes=coll,
+        notes=plan.notes,
+    )
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--rules", default=None, help="sharding rule preset name")
+    p.add_argument("--json", default=None)
+    p.add_argument("--unroll", action="store_true",
+                   help="analysis mode: unroll scans so cost_analysis counts "
+                        "every layer/microbatch (memory numbers NOT "
+                        "production-representative)")
+    p.add_argument("--include-eagr", action="store_true",
+                   help="also run the bonus EAGr engine cell")
+    args = p.parse_args(argv)
+
+    from repro.configs import all_cells, get_arch
+    from repro.launch.mesh import make_production_mesh
+
+    cells = all_cells()
+    if args.include_eagr:
+        cells += [("eagr", s) for s in get_arch("eagr").shapes]
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    records, failures = [], []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = int(jax.numpy.prod(jax.numpy.array(mesh.devices.shape)))
+        for a, s in cells:
+            tag = f"{a:22s} {s:15s} [{'2x16x16' if multi_pod else '16x16'}]"
+            try:
+                rec = run_cell(a, s, mesh, args.rules, unroll=args.unroll)
+                records.append(rec)
+                peak = (rec["temp_bytes"] + rec["arg_bytes"]) / 1e9
+                print(f"{tag} OK {rec['seconds']:6.1f}s "
+                      f"temp={rec['temp_bytes']/1e9:7.2f}GB "
+                      f"peak~{peak:7.2f}GB "
+                      f"flops={rec['flops']:.3e} "
+                      f"coll={sum(rec['collective_bytes'].values())/1e9:8.3f}GB",
+                      flush=True)
+            except Exception as e:
+                failures.append((a, s, multi_pod, repr(e)))
+                print(f"{tag} FAIL {type(e).__name__}: {str(e)[:200]}", flush=True)
+                traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n{len(records)} cells OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

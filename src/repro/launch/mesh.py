@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init;
+tests and benches must see the real single CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
+    composes with data for all data-parallel collectives."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names — lets the same sharded
+    step functions run on the local CPU for smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

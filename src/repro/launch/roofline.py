@@ -1,0 +1,215 @@
+"""Roofline analysis over dry-run records (§Roofline deliverable).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the target
+TPU v5e pod:
+
+  compute    = HLO_FLOPs            / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips * 819e9  B/s HBM)
+  collective = collective_bytes     / (chips * 2 * 50e9 B/s ICI links)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes, HLO-text parsing for
+collective operand bytes (launch/dryrun.py). cost_analysis counts a while
+body ONCE, so the roofline pass lowers the *unrolled* analysis variant
+(--unroll) where every layer and accumulation microbatch is explicit in the
+HLO. The production (scanned) variant provides the memory_analysis numbers.
+
+MODEL_FLOPS (analytic "useful" flops) per family:
+  LM train    6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+  LM prefill  2 * N_active * tokens + attention term
+  LM decode   2 * N_active * B + attention 4*B*S*H*hd (one new token)
+  GNN/recsys  closed-form per model (see _model_flops)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 2                # effective links per chip engaged per collective
+
+
+# ------------------------------------------------------- analytic model flops
+def _lm_params(cfg):
+    """(N_total, N_active) parameter counts from a TransformerConfig."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.padded_vocab, cfg.n_layers
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn = D * Hq * hd + 2 * D * Hkv * hd + Hq * hd * D
+    dense_ffn = 3 * D * F if (not cfg.is_moe or cfg.moe_dense_residual) else 0
+    moe_total = 3 * D * F * cfg.n_experts if cfg.is_moe else 0
+    moe_active = 3 * D * F * cfg.top_k if cfg.is_moe else 0
+    router = D * cfg.n_experts if cfg.is_moe else 0
+    total = L * (attn + dense_ffn + moe_total + router) + 2 * V * D
+    active = L * (attn + dense_ffn + moe_active + router) + 2 * V * D
+    return total, active
+
+
+def model_flops(arch_id: str, shape: str) -> tuple[float, float]:
+    """(MODEL_FLOPS for the whole step across all chips, N_params_active)."""
+    from repro.configs import get_arch  # noqa: F401  (arch registry import)
+    if arch_id in ("granite-3-2b", "internlm2-1.8b", "command-r-plus-104b",
+                   "arctic-480b", "dbrx-132b"):
+        import importlib
+        from repro.configs import _MODULES
+        mod = importlib.import_module(_MODULES[arch_id])
+        lm = [c.cell_contents for c in mod.ARCH.build.__closure__
+              if hasattr(c.cell_contents, "cfg")][0]
+        cfg = lm.cfg
+        _, n_active = _lm_params(cfg)
+        L, Hq, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        from repro.configs.lm_common import SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        B, S = d["batch"], d["seq"]
+        tokens = B * S
+        attn_fwd = 4 * tokens * S / 2 * Hq * hd * L   # causal: S/2 avg context
+        if d["kind"] == "train":
+            return 6 * n_active * tokens + 3 * attn_fwd, n_active
+        if d["kind"] == "prefill":
+            return 2 * n_active * tokens + attn_fwd, n_active
+        # decode: 1 token/row against an S-cache
+        return 2 * n_active * B + 4 * B * S * Hq * hd * L, n_active
+    if arch_id == "graphcast":
+        from repro.configs.graphcast import CFG
+        from repro.configs.gnn_common import SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        dh = CFG.d_hidden
+        e_gm = 4 * d["n"]
+        mlp2 = lambda din, dh_: 2 * (din * dh_ + dh_ * dh_)
+        per_edge = mlp2(3 * dh, dh)
+        per_node = mlp2(2 * dh, dh)
+        fwd = (d["n"] * mlp2(CFG.n_vars, dh)                   # grid embed
+               + 2 * e_gm * per_edge + (CFG.n_mesh + d["n"]) * per_node
+               + CFG.n_layers * (CFG.n_mesh_edges * per_edge
+                                 + CFG.n_mesh * per_node)
+               + d["n"] * mlp2(dh, dh))
+        return 3 * fwd, None
+    if arch_id == "gat-cora":
+        from repro.configs.gnn_common import SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        fwd = (2 * d["n"] * d["d_feat"] * 64
+               + 2 * d["n"] * 64 * d["classes"]
+               + 4 * d["e"] * (64 + d["classes"]))
+        return 3 * fwd, None
+    if arch_id == "gatedgcn":
+        from repro.configs.gnn_common import SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        dh = 70
+        fwd = (2 * d["n"] * d["d_feat"] * dh
+               + 16 * (5 * 2 * d["n"] * dh * dh + 6 * d["e"] * dh))
+        return 3 * fwd, None
+    if arch_id == "nequip":
+        from repro.configs.nequip import CFG
+        from repro.configs.gnn_common import SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        mul, P = CFG.d_hidden, len(CFG.paths)
+        # per edge per path: intertwiner contraction ~ 2*mul*(2l+1)^2*... ~ 50*mul
+        per_edge = P * 70 * mul + 2 * CFG.n_rbf * CFG.radial_hidden \
+            + 2 * CFG.radial_hidden * P * mul
+        per_node = 2 * (mul * 4) * mul * 9
+        fwd = CFG.n_layers * (d["e"] * per_edge + d["n"] * per_node)
+        mult = 3 if shape != "molecule" else 9   # force training: grad-of-grad
+        return mult * fwd, None
+    if arch_id == "dien":
+        from repro.configs.dien import CFG, SHAPE_DEFS
+        d = SHAPE_DEFS[shape]
+        dh, db, S = CFG.gru_dim, CFG.behav_dim, CFG.seq_len
+        gru = 2 * S * 3 * dh * (db + dh)
+        augru = 2 * S * 3 * dh * 2 * dh + 2 * S * (dh + db) * CFG.att_hidden
+        mlp = 2 * (CFG.gru_dim + 2 * db + CFG.embed_dim) * 200 + 2 * 200 * 80
+        if shape == "retrieval_cand":
+            user = gru + 2 * (dh + db) * CFG.embed_dim
+            return user + 2 * d["n_cand"] * CFG.embed_dim, None
+        per_user = gru + augru + mlp
+        mult = 3 if d["kind"] == "train" else 1
+        return mult * d["batch"] * per_user, None
+    raise KeyError(arch_id)
+
+
+# ----------------------------------------------------------------- the table
+def analyze(records: list[dict], chips: int | None = None) -> list[dict]:
+    out = []
+    for r in records:
+        n_chips = 1
+        for v in r["mesh"].values():
+            n_chips *= v
+        # cost_analysis numbers are PER DEVICE in the SPMD module
+        mult = 1.0
+        for tok in str(r.get("notes", "")).split():
+            if tok.startswith("step_multiplier="):
+                mult = float(tok.split("=")[1])
+        flops_dev = max(r.get("flops", 0.0), 0.0) * mult
+        bytes_dev = max(r.get("bytes_accessed", 0.0), 0.0) * mult
+        coll_dev = sum(r.get("collective_bytes", {}).values()) * mult
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = bytes_dev / HBM_BW
+        t_coll = coll_dev / (ICI_LINKS * ICI_BW)
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        bottleneck = max(terms, key=terms.get)
+        try:
+            mf, n_active = model_flops(r["arch"], r["shape"])
+        except Exception:
+            mf, n_active = None, None
+        rec = dict(
+            arch=r["arch"], shape=r["shape"], chips=n_chips,
+            t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+            bottleneck=bottleneck,
+            hlo_flops_per_dev=flops_dev,
+            hlo_bytes_per_dev=bytes_dev,
+            collective_bytes_per_dev=coll_dev,
+            model_flops_total=mf,
+            useful_ratio=(mf / (flops_dev * n_chips)
+                          if mf and flops_dev > 0 else None),
+            roofline_fraction=(
+                (mf / n_chips / PEAK_FLOPS) / max(max(terms.values()), 1e-30)
+                if mf else None),
+            # memory term from XLA-CPU bytes_accessed counts operands across
+            # fusion boundaries (a strict upper bound, ~10-30x fused TPU HBM
+            # traffic); roof_cc uses only the reliable compute/collective terms
+            roofline_cc=(
+                (mf / n_chips / PEAK_FLOPS) / max(t_compute, t_coll, 1e-30)
+                if mf else None),
+            temp_gb=r["temp_bytes"] / 1e9,
+            notes=r.get("notes", ""),
+        )
+        out.append(rec)
+    return out
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':15s} {'chips':>5s} "
+           f"{'compute(s)':>11s} {'memory(s)':>11s} {'collect(s)':>11s} "
+           f"{'bound':>10s} {'useful':>7s} {'roofline':>8s} {'roof-cc':>8s} "
+           f"{'temp':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        useful = (f"{r['useful_ratio']:6.2f}" if r["useful_ratio"] else "   n/a")
+        roof = (f"{r['roofline_fraction']:7.1%}" if r["roofline_fraction"]
+                else "    n/a")
+        roofcc = (f"{r['roofline_cc']:7.1%}" if r.get("roofline_cc")
+                  else "    n/a")
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:15s} {r['chips']:5d} "
+            f"{r['t_compute_s']:11.3e} {r['t_memory_s']:11.3e} "
+            f"{r['t_collective_s']:11.3e} {r['bottleneck']:>10s} "
+            f"{useful:>7s} {roof:>8s} {roofcc:>8s} {r['temp_gb']:6.1f}G")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("records", help="json from dryrun --json")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+    with open(args.records) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    print(format_table(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# Assigned-architecture model definitions (pure JAX, shard_map/pjit-ready):
+#   transformer.py  GQA/MoE decoder-only LM family (5 archs)
+#   gnn/            gat_cora, gatedgcn, graphcast, nequip
+#   recsys/         DIEN
+# All models expose: param_specs(cfg), init_params(cfg, key), plus family-
+# specific step builders consumed by launch/dryrun.py and the smoke tests.

@@ -1,0 +1,179 @@
+"""Shared model substrate: parameter specs with logical sharding axes,
+norms, RoPE, blocked (flash-style) jnp attention, chunked cross-entropy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- param specs
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape + dtype + one *logical* axis name per dim (None = replicated).
+    Logical names are mapped to mesh axes by distributed/sharding.py rules."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_to_sds(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_from_specs(tree, key):
+    """Random init for smoke tests / examples (never used by the dry-run)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        fan_in = s.shape[0] if len(s.shape) > 1 else max(1, s.shape[-1])
+        scale = s.init_scale / np.sqrt(fan_in)
+        out.append((jax.random.normal(k, s.shape, jnp.float32) * scale).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(dt)
+
+
+# -------------------------------------------------------------------- rope
+def rope_angles(positions: jnp.ndarray, head_dim: int, base: float = 10000.0):
+    half = head_dim // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, d). cos/sin: (S, d/2) (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # (S, 1, half) -> broadcast over head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def blocked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Memory-bounded jnp attention (the lowered production path; the Pallas
+    flash kernel is the TPU-runtime analogue validated against the same math).
+
+    q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d). Scans over q chunks so the live
+    score tensor is (B, Hq, q_chunk, Skv) instead of (B, Hq, Sq, Skv).
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    # Grouped-query form: fold the group into the q tensor instead of
+    # jnp.repeat-ing K/V `group` times (repeat materializes group x the KV
+    # cache per layer — measured +3.5 GB/device on arctic decode_32k).
+    qg = q.reshape(B, Hkv, group, Sq, d)
+
+    pad = (-Sq) % q_chunk
+    qp = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = qp.shape[3] // q_chunk
+    qc = qp.reshape(B, Hkv, group, n_chunks, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+
+    kpos = jnp.arange(Skv)[None, :]
+    lmask = None if lengths is None else (kpos < lengths[:, None])  # (B, Skv)
+
+    # Nested remat: without it, the layer-level backward materializes the
+    # softmax probs for ALL q chunks at once — a stacked (n_chunks, B, H,
+    # q_chunk, Skv) fp32 tensor (measured 3.8 GB/device on arctic train_4k).
+    # checkpointing the chunk makes the backward recompute one chunk's scores
+    # at a time: the flash-attention memory property in pure jnp.
+    @jax.checkpoint
+    def one_chunk(c, qi):
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if causal:
+            qpos = c * q_chunk + jnp.arange(q_chunk)[:, None] + (Skv - Sq)
+            s = jnp.where(qpos >= kpos, s, -jnp.inf)
+        if lmask is not None:
+            s = jnp.where(lmask[:, None, None, None, :], s, -jnp.inf)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+        return o / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), qc))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq + pad, d)
+    return out[:, :, :Sq, :].astype(q.dtype)
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean cross entropy in fp32. logits: (..., V); labels: (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def fused_ce_loss(x: jnp.ndarray, lm_head: jnp.ndarray, labels: jnp.ndarray,
+                  *, n_valid_vocab: int, z_loss: float = 0.0,
+                  chunk: int = 512) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Memory-efficient vocab projection + cross entropy + z-loss.
+
+    The full (B, S, V) logits tensor never materializes: the sequence is
+    scanned in ``chunk``-sized slices with per-chunk rematerialization, so the
+    live logits buffer is (B, chunk, V) and the backward pass recomputes each
+    chunk's projection instead of storing it. Padded vocab columns
+    (>= n_valid_vocab) are masked to -inf. Returns (mean nll, mean z-term).
+    """
+    B, S, D = x.shape
+    V = lm_head.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    xc = x.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(V) < n_valid_vocab)[None, None, :]
+
+    @jax.checkpoint
+    def one(carry, xl):
+        nll_sum, z_sum = carry
+        xi, li = xl
+        logits = (xi.astype(jnp.float32) @ lm_head.astype(jnp.float32))
+        logits = jnp.where(valid, logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        return (nll_sum + nll.sum(), z_sum + (lse * lse).sum()), None
+
+    (nll_sum, z_sum), _ = jax.lax.scan(one, (jnp.float32(0), jnp.float32(0)),
+                                       (xc, lc))
+    n_tok = B * S
+    return nll_sum / n_tok, z_loss * z_sum / n_tok

@@ -1,0 +1,1 @@
+from repro.models.gnn.common import GraphBatch, segment_softmax  # noqa: F401

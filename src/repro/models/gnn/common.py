@@ -1,0 +1,111 @@
+"""Shared GNN substrate: flat padded graph batches + segment message passing.
+
+JAX sparse is BCOO-only, so message passing is expressed as gather
+(``x[edge_src]``) -> per-edge compute -> ``jax.ops.segment_sum``/``segment_max``
+scatter into destination nodes. This IS the system's sparse engine; the Pallas
+``segment_agg`` kernel is the TPU-optimized version of the same contraction
+(validated against it in tests).
+
+All four GNN shape regimes flatten to one ``GraphBatch``:
+  full_graph_sm / ogb_products  one graph, all nodes/edges
+  minibatch_lg                  sampled union subgraph (padded, masked)
+  molecule                      B small graphs flattened with ``graph_ids``
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Flat padded graph. Edges are (src -> dst); aggregation is into dst."""
+
+    x: jnp.ndarray            # (N, F) node features (or positions for nequip)
+    edge_src: jnp.ndarray     # (E,) int32
+    edge_dst: jnp.ndarray     # (E,) int32
+    edge_mask: jnp.ndarray    # (E,) bool
+    node_mask: jnp.ndarray    # (N,) bool
+    labels: jnp.ndarray       # (N,) int32 node labels or (G,) graph targets
+    label_mask: jnp.ndarray   # same leading dim as labels
+    graph_ids: jnp.ndarray | None = None  # (N,) int32 for batched small graphs
+    n_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+    positions: jnp.ndarray | None = None  # (N, 3) for geometric models
+    species: jnp.ndarray | None = None    # (N,) int32 atomic species
+
+
+def mask_edges(vals: jnp.ndarray, edge_mask: jnp.ndarray) -> jnp.ndarray:
+    return vals * edge_mask.astype(vals.dtype)[:, None]
+
+
+def agg_sum(vals: jnp.ndarray, edge_dst: jnp.ndarray, n_nodes: int,
+            edge_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Masked segment-sum of per-edge values into destination nodes."""
+    if edge_mask is not None:
+        vals = mask_edges(vals, edge_mask)
+    return jax.ops.segment_sum(vals, edge_dst, num_segments=n_nodes)
+
+
+def agg_mean(vals, edge_dst, n_nodes, edge_mask=None):
+    s = agg_sum(vals, edge_dst, n_nodes, edge_mask)
+    ones = jnp.ones((vals.shape[0], 1), vals.dtype)
+    if edge_mask is not None:
+        ones = mask_edges(ones, edge_mask)
+    deg = jax.ops.segment_sum(ones, edge_dst, num_segments=n_nodes)
+    return s / jnp.maximum(deg, 1.0)
+
+
+def segment_softmax(scores: jnp.ndarray, edge_dst: jnp.ndarray, n_nodes: int,
+                    edge_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Numerically-stable softmax over the incoming edges of each node.
+    scores: (E, H). Returns normalized weights (E, H); masked edges get 0."""
+    if edge_mask is not None:
+        scores = jnp.where(edge_mask[:, None], scores, -jnp.inf)
+    smax = jax.ops.segment_max(scores, edge_dst, num_segments=n_nodes)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[edge_dst])
+    if edge_mask is not None:
+        ex = mask_edges(ex, edge_mask)
+    denom = jax.ops.segment_sum(ex, edge_dst, num_segments=n_nodes)
+    return ex / jnp.maximum(denom[edge_dst], 1e-9)
+
+
+def graph_readout(node_vals: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Sum-pool node values per graph -> (n_graphs, F)."""
+    vals = node_vals * batch.node_mask.astype(node_vals.dtype)[:, None]
+    if batch.graph_ids is None:
+        return vals.sum(axis=0, keepdims=True)
+    return jax.ops.segment_sum(vals, batch.graph_ids, num_segments=batch.n_graphs)
+
+
+def mlp_specs(dims: tuple[int, ...], prefix_axes=("embed", "mlp"), dtype=jnp.float32):
+    """ParamSpecs for a plain MLP: w{i} (d_in, d_out), b{i} (d_out,)."""
+    specs = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        ax = (prefix_axes[0] if i == 0 else None,
+              prefix_axes[1] if i == len(dims) - 2 else None)
+        specs[f"w{i}"] = ParamSpec((a, b), ax, dtype)
+        specs[f"b{i}"] = ParamSpec((b,), (None,), dtype, init_scale=0.0)
+    return specs
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act=jax.nn.relu, final_act=False) -> jnp.ndarray:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"].astype(x.dtype) + p[f"b{i}"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def node_ce_loss(logits: jnp.ndarray, batch: GraphBatch) -> jnp.ndarray:
+    """Masked node-classification cross entropy."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch.labels[:, None], axis=-1)[:, 0]
+    m = batch.label_mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)

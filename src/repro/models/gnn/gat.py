@@ -1,0 +1,102 @@
+"""GAT (gat-cora): multi-head graph attention network [arXiv:1710.10903].
+
+Kernel regime: SDDMM (per-edge attention logits) -> segment-softmax ->
+SpMM (attention-weighted neighbor sum), all via gather + segment ops.
+
+Paper-exact Cora config: 2 layers, 8 hidden units per head, 8 heads (concat)
+in layer 1; 1 output layer with n_classes units averaged over heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamSpec
+from repro.models.gnn.common import (
+    GraphBatch,
+    agg_sum,
+    graph_readout,
+    node_ce_loss,
+    segment_softmax,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    task: str = "node"            # 'node' | 'graph'
+    dropout: float = 0.0          # inference/smoke default; train examples set it
+    compute_dtype: Any = jnp.float32
+
+
+def param_specs(cfg: GATConfig):
+    specs = {}
+    d = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        out = cfg.n_classes if last else cfg.d_hidden
+        specs[f"layer{i}"] = {
+            "w": ParamSpec((d, heads, out), ("embed", "heads", None)),
+            "a_src": ParamSpec((heads, out), ("heads", None)),
+            "a_dst": ParamSpec((heads, out), ("heads", None)),
+            "bias": ParamSpec((heads, out), ("heads", None), init_scale=0.0),
+        }
+        d = out * heads
+    if cfg.task == "graph":
+        specs["readout_w"] = ParamSpec((d, cfg.n_classes), ("embed", None))
+        specs["readout_b"] = ParamSpec((cfg.n_classes,), (None,), init_scale=0.0)
+    return specs
+
+
+def _gat_layer(p, x, batch: GraphBatch, *, concat: bool, act) -> jnp.ndarray:
+    """x: (N, F). Returns (N, heads*out) if concat else (N, out)."""
+    n = x.shape[0]
+    h = jnp.einsum("nf,fho->nho", x, p["w"].astype(x.dtype))      # (N, H, O)
+    h = constrain(h, ("act_nodes", None, None))
+    e_src = jnp.einsum("nho,ho->nh", h, p["a_src"].astype(x.dtype))
+    e_dst = jnp.einsum("nho,ho->nh", h, p["a_dst"].astype(x.dtype))
+    scores = jax.nn.leaky_relu(
+        e_src[batch.edge_src] + e_dst[batch.edge_dst], negative_slope=0.2)
+    alpha = segment_softmax(scores, batch.edge_dst, n, batch.edge_mask)  # (E, H)
+    msgs = h[batch.edge_src] * alpha[..., None]                    # (E, H, O)
+    msgs = constrain(msgs, ("act_edges", None, None))
+    agg = agg_sum(msgs.reshape(msgs.shape[0], -1), batch.edge_dst, n,
+                  batch.edge_mask).reshape(n, *h.shape[1:])
+    agg = agg + p["bias"].astype(x.dtype)[None]
+    if concat:
+        return act(agg).reshape(n, -1)
+    return agg.mean(axis=1)                                        # head average
+
+
+def forward(params, batch: GraphBatch, cfg: GATConfig) -> jnp.ndarray:
+    x = batch.x.astype(cfg.compute_dtype)
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        x = _gat_layer(params[f"layer{i}"], x, batch,
+                       concat=not last, act=jax.nn.elu)
+    if cfg.task == "graph":
+        g = graph_readout(x, batch)
+        return g @ params["readout_w"].astype(x.dtype) + params["readout_b"]
+    return x
+
+
+def loss_fn(params, batch: GraphBatch, cfg: GATConfig):
+    logits = forward(params, batch, cfg)
+    if cfg.task == "graph":
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch.labels[:, None], axis=-1)[:, 0]
+        m = batch.label_mask.astype(jnp.float32)
+        loss = -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    else:
+        loss = node_ce_loss(logits, batch)
+    return loss, {"ce": loss}

@@ -1,0 +1,171 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN [arXiv:2212.12794].
+
+Three bipartite/homogeneous message-passing stages, all with per-edge MLPs of
+(src, dst, edge) features, sum aggregation, residual node/edge MLP updates:
+
+  grid2mesh encoder : grid nodes (n_vars features) -> icosahedral mesh nodes
+  processor (16x)   : multimesh message passing on mesh nodes
+  mesh2grid decoder : mesh nodes -> grid nodes -> per-grid-node output (n_vars)
+
+mesh_refinement=6 fixes the mesh statically: 10*4^6+2 = 40,962 mesh nodes and
+sum_r 30*4^r (r=0..6) = 163,830 undirected multimesh edges (the multi-scale
+edge set GraphCast uses) = 327,660 directed. Grid size and grid<->mesh edge
+lists come from the input shape (they are data, not parameters).
+
+For the generic graph shapes (full_graph_sm etc.) the same model runs with the
+shape's node/edge counts standing in for grid/mesh sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamSpec, layer_norm
+from repro.models.gnn.common import agg_sum, mlp_apply, mlp_specs
+
+
+def mesh_sizes(refinement: int) -> tuple[int, int]:
+    """(n_mesh_nodes, n_directed_multimesh_edges) for an icosahedron refined
+    ``refinement`` times, with the multimesh keeping every level's edges."""
+    nodes = 10 * 4**refinement + 2
+    und = sum(30 * 4**r for r in range(refinement + 1))
+    return nodes, 2 * und
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16              # processor depth
+    d_hidden: int = 512
+    mesh_refinement: int = 6
+    n_vars: int = 227               # input/output channels per grid node
+    scan_unroll: int = 1
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def n_mesh(self) -> int:
+        return mesh_sizes(self.mesh_refinement)[0]
+
+    @property
+    def n_mesh_edges(self) -> int:
+        return mesh_sizes(self.mesh_refinement)[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphCastBatch:
+    """Inputs for one step. Grid->mesh and mesh->grid edges are data."""
+
+    grid_x: jnp.ndarray        # (G, n_vars)
+    g2m_src: jnp.ndarray       # (E_g2m,) grid ids
+    g2m_dst: jnp.ndarray       # (E_g2m,) mesh ids
+    mesh_src: jnp.ndarray      # (E_mesh,)
+    mesh_dst: jnp.ndarray      # (E_mesh,)
+    m2g_src: jnp.ndarray       # (E_m2g,) mesh ids
+    m2g_dst: jnp.ndarray       # (E_m2g,) grid ids
+    targets: jnp.ndarray       # (G, n_vars)
+    grid_mask: jnp.ndarray | None = None  # (G,) bool; padded grid rows False.
+    # Padded EDGES point at the sink node (last padded slot) on both ends, so
+    # they only pollute sink rows, which grid_mask excludes from the loss.
+    # static; 0 => cfg.n_mesh
+    n_mesh: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+
+def _edge_mlp_specs(d):
+    return mlp_specs((3 * d, d, d))
+
+
+def _node_mlp_specs(d):
+    return mlp_specs((2 * d, d, d))
+
+
+def param_specs(cfg: GraphCastConfig):
+    d = cfg.d_hidden
+    proc_layer = {
+        "edge": {k: ParamSpec((cfg.n_layers, *s.shape), ("layers", *s.axes), s.dtype, s.init_scale)
+                 for k, s in _edge_mlp_specs(d).items()},
+        "node": {k: ParamSpec((cfg.n_layers, *s.shape), ("layers", *s.axes), s.dtype, s.init_scale)
+                 for k, s in _node_mlp_specs(d).items()},
+        "ln_e_g": ParamSpec((cfg.n_layers, d), ("layers", None)),
+        "ln_e_b": ParamSpec((cfg.n_layers, d), ("layers", None), init_scale=0.0),
+        "ln_n_g": ParamSpec((cfg.n_layers, d), ("layers", None)),
+        "ln_n_b": ParamSpec((cfg.n_layers, d), ("layers", None), init_scale=0.0),
+    }
+    return {
+        "grid_embed": mlp_specs((cfg.n_vars, d, d)),
+        "mesh_init": ParamSpec((d,), (None,)),
+        "g2m_edge": _edge_mlp_specs(d),
+        "g2m_node": _node_mlp_specs(d),
+        "proc": proc_layer,
+        "m2g_edge": _edge_mlp_specs(d),
+        "m2g_node": _node_mlp_specs(d),
+        "out": mlp_specs((d, d, cfg.n_vars)),
+    }
+
+
+def _mp_step(edge_p, node_p, h_src, h_dst, e, src, dst, n_dst):
+    """One GraphCast message-passing block: edge MLP -> sum agg -> node MLP.
+    Returns (new_dst_nodes, new_edges); caller applies residual/norm."""
+    e_in = jnp.concatenate([h_src[src], h_dst[dst], e], axis=-1)
+    e_in = constrain(e_in, ("act_edges", None))
+    e_new = constrain(mlp_apply(edge_p, e_in, act=jax.nn.silu),
+                      ("act_edges", None))
+    agg = agg_sum(e_new, dst, n_dst)
+    n_in = jnp.concatenate([h_dst, agg], axis=-1)
+    out = mlp_apply(node_p, n_in, act=jax.nn.silu)
+    return constrain(out, ("act_nodes", None)), e_new
+
+
+def forward(params, batch: GraphCastBatch, cfg: GraphCastConfig) -> jnp.ndarray:
+    cdt = cfg.compute_dtype
+    n_mesh = batch.n_mesh or cfg.n_mesh
+    G = batch.grid_x.shape[0]
+    d = cfg.d_hidden
+
+    hg = mlp_apply(params["grid_embed"], batch.grid_x.astype(cdt), act=jax.nn.silu)
+    hg = constrain(hg, ("act_nodes", None))
+    hm = jnp.broadcast_to(params["mesh_init"].astype(cdt), (n_mesh, d))
+    hm = constrain(hm, ("act_nodes", None))
+
+    # ---- grid2mesh encode
+    e0 = jnp.zeros((batch.g2m_src.shape[0], d), cdt)
+    hm_new, _ = _mp_step(params["g2m_edge"], params["g2m_node"], hg, hm, e0,
+                         batch.g2m_src, batch.g2m_dst, n_mesh)
+    hm = hm + hm_new
+
+    # ---- processor: scan over the 16 multimesh layers
+    e_mesh = jnp.zeros((batch.mesh_src.shape[0], d), cdt)
+
+    def body(carry, lp):
+        hm, e = carry
+        hm_new, e_new = _mp_step(lp["edge"], lp["node"], hm, hm, e,
+                                 batch.mesh_src, batch.mesh_dst, n_mesh)
+        hm = layer_norm(hm + hm_new, lp["ln_n_g"], lp["ln_n_b"])
+        e = layer_norm(e + e_new, lp["ln_e_g"], lp["ln_e_b"])
+        return (hm, e), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False)
+    (hm, _), _ = jax.lax.scan(body_fn, (hm, e_mesh), params["proc"],
+                              unroll=cfg.scan_unroll)
+
+    # ---- mesh2grid decode
+    e1 = jnp.zeros((batch.m2g_src.shape[0], d), cdt)
+    hg_new, _ = _mp_step(params["m2g_edge"], params["m2g_node"], hm, hg, e1,
+                         batch.m2g_src, batch.m2g_dst, G)
+    hg = hg + hg_new
+    return mlp_apply(params["out"], hg, act=jax.nn.silu)
+
+
+def loss_fn(params, batch: GraphCastBatch, cfg: GraphCastConfig):
+    pred = forward(params, batch, cfg)
+    err = (pred.astype(jnp.float32) - batch.targets.astype(jnp.float32))
+    if batch.grid_mask is not None:
+        m = batch.grid_mask.astype(jnp.float32)[:, None]
+        loss = (err * err * m).sum() / jnp.maximum(m.sum() * err.shape[-1], 1.0)
+    else:
+        loss = jnp.mean(err * err)
+    return loss, {"mse": loss}

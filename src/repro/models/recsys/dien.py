@@ -1,0 +1,242 @@
+"""DIEN: Deep Interest Evolution Network [arXiv:1809.03672].
+
+Pipeline (paper Fig. 2):
+  behavior embeddings  e_t = [item_embed ; cat_embed]            (2 * 18 = 36)
+  interest extraction  GRU over the 100-step behavior sequence   (hidden 108)
+    + auxiliary loss: sigmoid(h_t . e_{t+1}) vs sampled negatives
+  interest evolution   AUGRU — GRU whose update gate is scaled by
+                       attention(h_t, target embedding)
+  prediction MLP       [user features] -> 200 -> 80 -> 1 (sigmoid CTR)
+
+The embedding lookup is the hot path: JAX has no native EmbeddingBag, so the
+multi-hot user-profile features go through gather + segment_sum (the
+``embedding_bag`` Pallas kernel is the TPU analogue, validated in tests).
+
+``retrieval_score`` (the retrieval_cand shape) scores one user against 10^6
+candidates with the candidate-independent interest state computed once and a
+batched MLP over candidates — the two-tower approximation of DIEN's ranking
+path (full AUGRU re-evaluation per candidate is O(n_cand * seq_len) and is
+exactly what retrieval setups avoid; documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 1_000_000
+    n_cats: int = 1_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple[int, ...] = (200, 80)
+    n_profile_feats: int = 100_000     # multi-hot user-profile vocabulary
+    profile_bag_size: int = 16         # multi-hot ids per user (padded)
+    att_hidden: int = 80
+    scan_unroll: int = 1          # analysis mode: seq_len => straight-line HLO
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def behav_dim(self) -> int:
+        return 2 * self.embed_dim      # [item ; cat]
+
+
+def _gru_specs(d_in: int, d_h: int, prefix: str):
+    return {
+        f"{prefix}_wx": ParamSpec((d_in, 3 * d_h), ("embed", "mlp")),
+        f"{prefix}_wh": ParamSpec((d_h, 3 * d_h), (None, "mlp")),
+        f"{prefix}_b": ParamSpec((3 * d_h,), (None,), init_scale=0.0),
+    }
+
+
+def param_specs(cfg: DIENConfig):
+    d_b, d_h = cfg.behav_dim, cfg.gru_dim
+    mlp_in = d_h + 2 * d_b + cfg.embed_dim   # interest + target + pooled + profile
+    dims = (mlp_in, *cfg.mlp_dims, 1)
+    mlp = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        mlp[f"w{i}"] = ParamSpec((a, b), ("embed" if i == 0 else None, None))
+        mlp[f"b{i}"] = ParamSpec((b,), (None,), init_scale=0.0)
+    return {
+        "item_embed": ParamSpec((cfg.n_items, cfg.embed_dim), ("vocab", None)),
+        "cat_embed": ParamSpec((cfg.n_cats, cfg.embed_dim), (None, None)),
+        "profile_embed": ParamSpec((cfg.n_profile_feats, cfg.embed_dim),
+                                   ("vocab", None)),
+        **_gru_specs(d_b, d_h, "gru"),        # interest extraction
+        **_gru_specs(d_h, d_h, "augru"),      # interest evolution (input: h_t)
+        "att_w0": ParamSpec((d_h + d_b, cfg.att_hidden), (None, None)),
+        "att_b0": ParamSpec((cfg.att_hidden,), (None,), init_scale=0.0),
+        "att_w1": ParamSpec((cfg.att_hidden, 1), (None, None)),
+        "mlp": mlp,
+        # retrieval tower: project user state into candidate-embedding space
+        "ret_w": ParamSpec((d_h + d_b, cfg.embed_dim), (None, None)),
+    }
+
+
+# ----------------------------------------------------------------- GRU cells
+def _gru_step(p, prefix, x, h):
+    """Standard GRU. x: (B, d_in), h: (B, d_h)."""
+    d_h = h.shape[-1]
+    gates = x @ p[f"{prefix}_wx"].astype(x.dtype) \
+        + h @ p[f"{prefix}_wh"].astype(x.dtype) + p[f"{prefix}_b"].astype(x.dtype)
+    r, z, n = jnp.split(gates, 3, axis=-1)
+    r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+    # candidate uses reset-scaled recurrent term
+    n = jnp.tanh(x @ p[f"{prefix}_wx"].astype(x.dtype)[:, 2 * d_h:]
+                 + r * (h @ p[f"{prefix}_wh"].astype(x.dtype)[:, 2 * d_h:])
+                 + p[f"{prefix}_b"].astype(x.dtype)[2 * d_h:])
+    return (1.0 - z) * n + z * h
+
+
+def _augru_step(p, x, h, att):
+    """AUGRU: attention scales the update gate (DIEN eq. 8):
+    u' = att * u;  h_t = (1 - u') h_{t-1} + u' h~_t  — att = 0 freezes h."""
+    d_h = h.shape[-1]
+    gates = x @ p["augru_wx"].astype(x.dtype) \
+        + h @ p["augru_wh"].astype(x.dtype) + p["augru_b"].astype(x.dtype)
+    r, z, _ = jnp.split(gates, 3, axis=-1)
+    r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+    z = att[:, None] * z
+    n = jnp.tanh(x @ p["augru_wx"].astype(x.dtype)[:, 2 * d_h:]
+                 + r * (h @ p["augru_wh"].astype(x.dtype)[:, 2 * d_h:])
+                 + p["augru_b"].astype(x.dtype)[2 * d_h:])
+    return (1.0 - z) * h + z * n
+
+
+# ------------------------------------------------------------------ embedding
+def behavior_embed(params, item_ids, cat_ids, cfg: DIENConfig):
+    """(B, S) ids -> (B, S, 2*embed_dim)."""
+    ei = jnp.take(params["item_embed"], item_ids, axis=0)
+    ec = jnp.take(params["cat_embed"], cat_ids, axis=0)
+    return jnp.concatenate([ei, ec], axis=-1).astype(cfg.compute_dtype)
+
+
+def profile_embed(params, profile_ids, profile_mask, cfg: DIENConfig):
+    """EmbeddingBag: multi-hot profile ids (B, n_bag) -> mean-pooled (B, d).
+    gather + masked mean == segment_sum over the flattened bag layout."""
+    e = jnp.take(params["profile_embed"], profile_ids, axis=0)
+    m = profile_mask.astype(e.dtype)[..., None]
+    return ((e * m).sum(axis=1) / jnp.maximum(m.sum(axis=1), 1.0)).astype(cfg.compute_dtype)
+
+
+# -------------------------------------------------------------------- forward
+def interest_states(params, behav, mask, cfg: DIENConfig):
+    """GRU over the behavior sequence. behav: (B, S, d_b). Returns (B, S, d_h)."""
+    B = behav.shape[0]
+    h0 = jnp.zeros((B, cfg.gru_dim), behav.dtype)
+
+    def step(h, xm):
+        x, m = xm
+        h_new = _gru_step(params, "gru", x, h)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, h
+
+    xs = (behav.transpose(1, 0, 2), mask.T)
+    _, hs = jax.lax.scan(step, h0, xs, unroll=cfg.scan_unroll)
+    return hs.transpose(1, 0, 2)
+
+
+def attention_scores(params, hs, target, mask):
+    """(B, S, d_h) x (B, d_b) -> softmax scores (B, S)."""
+    B, S, _ = hs.shape
+    t = jnp.broadcast_to(target[:, None, :], (B, S, target.shape[-1]))
+    a = jnp.concatenate([hs, t], axis=-1)
+    a = jax.nn.sigmoid(a @ params["att_w0"].astype(a.dtype)
+                       + params["att_b0"].astype(a.dtype))
+    logits = (a @ params["att_w1"].astype(a.dtype))[..., 0]
+    logits = jnp.where(mask, logits, -1e9)
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(hs.dtype)
+
+
+def evolve_interest(params, behav, hs, att, mask, cfg: DIENConfig):
+    """AUGRU over interest states. Returns final state (B, d_h)."""
+    B = behav.shape[0]
+    h0 = jnp.zeros((B, cfg.gru_dim), behav.dtype)
+
+    def step(h, xs_t):
+        h_in, a, m = xs_t
+        h_new = _augru_step(params, h_in, h, a)
+        return jnp.where(m[:, None], h_new, h), None
+
+    xs = (hs.transpose(1, 0, 2), att.T, mask.T)
+    h, _ = jax.lax.scan(step, h0, xs, unroll=cfg.scan_unroll)
+    return h
+
+
+def ctr_logits(params, batch, cfg: DIENConfig):
+    """Full ranking path. batch keys: item_ids, cat_ids (B,S) int32; mask (B,S)
+    bool; target_item, target_cat (B,); profile_ids (B,n_bag); profile_mask."""
+    behav = behavior_embed(params, batch["item_ids"], batch["cat_ids"], cfg)
+    target = behavior_embed(params, batch["target_item"][:, None],
+                            batch["target_cat"][:, None], cfg)[:, 0]
+    mask = batch["mask"]
+    hs = interest_states(params, behav, mask, cfg)
+    att = attention_scores(params, hs, target, mask)
+    final = evolve_interest(params, behav, hs, att, mask, cfg)
+    pooled = (behav * mask[..., None].astype(behav.dtype)).sum(1) \
+        / jnp.maximum(mask.sum(1, keepdims=True).astype(behav.dtype), 1.0)
+    prof = profile_embed(params, batch["profile_ids"], batch["profile_mask"], cfg)
+    x = jnp.concatenate([final, target, pooled, prof], axis=-1)
+    mlp = params["mlp"]
+    n = len([k for k in mlp if k.startswith("w")])
+    for i in range(n):
+        x = x @ mlp[f"w{i}"].astype(x.dtype) + mlp[f"b{i}"].astype(x.dtype)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x[:, 0], hs, behav
+
+
+def aux_loss(params, hs, behav, neg_behav, mask):
+    """DIEN auxiliary loss: h_t should predict e_{t+1} against a sampled
+    negative. hs: (B,S,d_h), behav/neg_behav: (B,S,d_b)."""
+    d_h = hs.shape[-1]
+    h, e_next = hs[:, :-1], behav[:, 1:]
+    e_neg = neg_behav[:, 1:]
+    m = mask[:, 1:].astype(jnp.float32)
+    # score by inner product on the shared prefix of dims
+    d = min(d_h, e_next.shape[-1])
+    pos = jnp.sum(h[..., :d] * e_next[..., :d], axis=-1).astype(jnp.float32)
+    neg = jnp.sum(h[..., :d] * e_neg[..., :d], axis=-1).astype(jnp.float32)
+    ll = jax.nn.log_sigmoid(pos) + jax.nn.log_sigmoid(-neg)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def loss_fn(params, batch, cfg: DIENConfig, aux_weight: float = 1.0):
+    logits, hs, behav = ctr_logits(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    ce = -jnp.mean(y * jax.nn.log_sigmoid(logits)
+                   + (1 - y) * jax.nn.log_sigmoid(-logits))
+    neg_behav = behavior_embed(params, batch["neg_item_ids"],
+                               batch["neg_cat_ids"], cfg)
+    al = aux_loss(params, hs, behav, neg_behav, batch["mask"])
+    return ce + aux_weight * al, {"ce": ce, "aux": al}
+
+
+def serve(params, batch, cfg: DIENConfig):
+    """Online/offline CTR scoring (serve_p99 / serve_bulk shapes)."""
+    logits, _, _ = ctr_logits(params, batch, cfg)
+    return jax.nn.sigmoid(logits)
+
+
+def retrieval_score(params, batch, cfg: DIENConfig):
+    """Score 1 user against n_cand candidates (retrieval_cand shape).
+    batch: item_ids/cat_ids/mask (1, S); profile_ids/profile_mask (1, n_bag);
+    cand_items, cand_cats (n_cand,). Returns (n_cand,) scores."""
+    behav = behavior_embed(params, batch["item_ids"], batch["cat_ids"], cfg)
+    mask = batch["mask"]
+    hs = interest_states(params, behav, mask, cfg)
+    final = hs[:, -1]                                        # (1, d_h)
+    pooled = (behav * mask[..., None].astype(behav.dtype)).sum(1) \
+        / jnp.maximum(mask.sum(1, keepdims=True).astype(behav.dtype), 1.0)
+    user = jnp.concatenate([final, pooled], axis=-1) @ params["ret_w"].astype(behav.dtype)
+    cand = jnp.take(params["item_embed"], batch["cand_items"], axis=0) \
+        + jnp.take(params["cat_embed"], batch["cand_cats"], axis=0)
+    return (cand.astype(user.dtype) @ user[0])               # (n_cand,)

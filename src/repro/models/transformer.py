@@ -1,0 +1,381 @@
+"""Decoder-only GQA transformer family (granite / internlm2 / command-r /
+arctic / dbrx) with optional Mixture-of-Experts FFNs.
+
+Pure-functional JAX: ``param_specs`` declares every parameter with logical
+sharding axes (mapped to the mesh by distributed/sharding.py), the forward
+pass is a ``lax.scan`` over layers (small HLO, fast multi-pod compiles) with
+a configurable remat policy, and three entry points mirror the assigned
+input shapes:
+
+  loss_fn        train_4k             (tokens -> mean CE, z-loss)
+  prefill        prefill_32k          (tokens -> logits + KV cache)
+  decode_step    decode_32k/long_500k (1 new token against a live KV cache)
+
+MoE supports two dispatch implementations (perf hillclimb §Perf):
+  'einsum'  GShard-style group-wise one-hot dispatch/combine einsums
+            (the SPMD-classic baseline; dispatch matmuls cost ~T/3F of
+            expert FLOPs),
+  'sort'    dropless sort-based dispatch: argsort tokens by expert, scatter
+            into (E, C) slots, gather back (no dispatch matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    ParamSpec,
+    apply_rope,
+    blocked_attention,
+    cross_entropy,
+    fused_ce_loss,
+    rms_norm,
+    rope_angles,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    rope_base: float = 10000.0
+    # MoE (n_experts == 0 => dense FFN)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    moe_impl: str = "einsum"           # 'einsum' | 'sort'
+    # numerics / memory
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"                # 'none' | 'full'
+    q_chunk: int = 512
+    ce_chunk: int = 512                # fused-CE sequence chunk
+    z_loss: float = 1e-4
+    vocab_pad_to: int = 128            # pad vocab so TP shards evenly / MXU-aligned
+    scan_unroll: int = 1               # analysis mode: n_layers => straight-line HLO
+                                       # (XLA cost_analysis counts a while body once)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // self.vocab_pad_to) * self.vocab_pad_to
+
+
+# ------------------------------------------------------------------ params
+def param_specs(cfg: TransformerConfig):
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    Hq, Hkv, hd, L = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    pdt = cfg.param_dtype
+
+    def lp(shape, axes, scale=1.0):   # layer-stacked param
+        return ParamSpec((L, *shape), ("layers", *axes), pdt, scale)
+
+    layers: dict[str, ParamSpec] = {
+        "ln1": lp((D,), (None,)),
+        "ln2": lp((D,), (None,)),
+        "wq": lp((D, Hq, hd), ("embed", "heads", None)),
+        "wk": lp((D, Hkv, hd), ("embed", "kv_heads", None)),
+        "wv": lp((D, Hkv, hd), ("embed", "kv_heads", None)),
+        "wo": lp((Hq, hd, D), ("heads", None, "embed")),
+    }
+    if cfg.is_moe:
+        E = cfg.n_experts
+        layers |= {
+            "router": lp((D, E), ("embed", None)),
+            "we_gate": lp((E, D, F), ("expert", "embed", None)),
+            "we_up": lp((E, D, F), ("expert", "embed", None)),
+            "we_down": lp((E, F, D), ("expert", None, "embed")),
+        }
+    if (not cfg.is_moe) or cfg.moe_dense_residual:
+        layers |= {
+            "w_gate": lp((D, F), ("embed", "mlp")),
+            "w_up": lp((D, F), ("embed", "mlp")),
+            "w_down": lp((F, D), ("mlp", "embed")),
+        }
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), pdt),
+        "layers": layers,
+        "final_norm": ParamSpec((D,), (None,), pdt),
+        "lm_head": ParamSpec((D, V), ("embed", "vocab"), pdt),
+    }
+
+
+# --------------------------------------------------------------------- ffn
+def _swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    return h @ w_down
+
+
+def _moe_ffn_einsum(x, lp, cfg: TransformerConfig):
+    """GShard-style group-wise einsum dispatch. x: (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(4, int(cfg.capacity_factor * S * k / E + 0.999) // 4 * 4)
+    logits = jnp.einsum("gsd,de->gse", x, lp["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    disp = jnp.zeros((B, S, E, C), dtype=x.dtype)
+    comb = jnp.zeros((B, S, E, C), dtype=jnp.float32)
+    counts = jnp.zeros((B, E), dtype=jnp.int32)
+    for j in range(k):                                      # static top-k unroll
+        mask_j = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)  # (B,S,E)
+        pos_j = jnp.cumsum(mask_j, axis=1) - 1 + counts[:, None, :]
+        keep = (mask_j > 0) & (pos_j < C)
+        slot = jax.nn.one_hot(jnp.where(keep, pos_j, C), C + 1,
+                              dtype=x.dtype)[..., :C]        # (B,S,E,C)
+        disp = disp + slot
+        comb = comb + slot.astype(jnp.float32) * gate_vals[..., j][..., None, None]
+        counts = counts + mask_j.sum(axis=1)
+
+    xd = jnp.einsum("gsec,gsd->egcd", disp, x)               # dispatch
+    xd = constrain(xd, ("act_expert", "act_batch", None, None))
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xd, lp["we_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("egcd,edf->egcf", xd, lp["we_up"].astype(x.dtype))
+    y = jnp.einsum("egcf,efd->egcd", h, lp["we_down"].astype(x.dtype))
+    y = constrain(y, ("act_expert", "act_batch", None, None))
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), y)
+    aux = _load_balance_loss(probs.reshape(-1, E), gate_idx.reshape(-1, k), E)
+    return out, aux
+
+
+def _moe_ffn_sort(x, lp, cfg: TransformerConfig):
+    """Per-row sort-based dispatch: no (T,E,C) dispatch matmuls. x: (B, S, D).
+
+    The sort/permutation is vmapped over the batch row so every gather/scatter
+    is *batched* — GSPMD keeps the batch dim sharded over (pod, data). A
+    global argsort over all B*S*k assignments (the naive MegaBlocks port)
+    defeats the SPMD partitioner: arbitrary cross-shard permutation indices
+    force it to replicate the (T*k, D) tensors (measured: 103 GB/device for
+    dbrx prefill; see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(4, int(cfg.capacity_factor * S * k / E + 3.0) // 4 * 4)
+    logits = jnp.einsum("bsd,de->bse", x, lp["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xr, idxr):
+        """xr (S, D), idxr (S, k) -> per-row expert buffers + inverse map."""
+        flat_e = idxr.reshape(-1)                            # (S*k,)
+        order = jnp.argsort(flat_e)
+        tok_of = order // k
+        e_sorted = flat_e[order]
+        ar = jnp.arange(S * k)
+        run_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+        slot = ar - run_start[e_sorted]
+        keep = slot < C
+        buf = jnp.zeros((E, C, D), dtype=xr.dtype)
+        buf = buf.at[e_sorted, jnp.where(keep, slot, 0)].add(
+            jnp.where(keep[:, None], xr[tok_of], 0.0))
+        inv = jnp.zeros_like(order).at[order].set(ar)
+        return buf, slot[inv].reshape(S, k), keep[inv].reshape(S, k)
+
+    buf, slot_sk, keep_sk = jax.vmap(dispatch_row)(x, gate_idx)  # (B,E,C,D)
+    buf = constrain(buf, ("act_batch", "act_expert", None, None))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, lp["we_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, lp["we_up"].astype(x.dtype))
+    y = jnp.einsum("becf,efd->becd", h, lp["we_down"].astype(x.dtype))
+    y = constrain(y, ("act_batch", "act_expert", None, None))
+
+    def gather_row(yr, idxr, slotr, keepr):
+        picked = yr[idxr, jnp.where(keepr, slotr, 0)]        # (S, k, D)
+        return jnp.where(keepr[..., None], picked, 0.0)
+
+    picked = jax.vmap(gather_row)(y, gate_idx, slot_sk, keep_sk)  # (B,S,k,D)
+    out = (picked * gate_vals[..., None].astype(x.dtype)).sum(axis=2)
+    aux = _load_balance_loss(probs.reshape(-1, E), gate_idx.reshape(-1, k), E)
+    return out, aux
+
+
+def _load_balance_loss(probs, gate_idx, E):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    f = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean(axis=0)
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)
+
+
+# ------------------------------------------------------------------- layer
+def _attention(x, lp, cfg, cos, sin, *, causal, kv_cache=None, lengths=None):
+    """x: (B, S, D). Returns (out, (k, v)) with k/v (B, Hkv, S_total, hd)."""
+    cdt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(cdt))
+    kk = jnp.einsum("bsd,dhk->bshk", x, lp["wk"].astype(cdt))
+    vv = jnp.einsum("bsd,dhk->bshk", x, lp["wv"].astype(cdt))
+    q = constrain(apply_rope(q, cos, sin), ("act_batch", "act_seq", "act_heads", None))
+    kk = constrain(apply_rope(kk, cos, sin), ("act_batch", "act_seq", "act_kv_heads", None))
+    vv = constrain(vv, ("act_batch", "act_seq", "act_kv_heads", None))
+    q = q.transpose(0, 2, 1, 3)      # (B, Hq, S, hd)
+    kk = kk.transpose(0, 2, 1, 3)
+    vv = vv.transpose(0, 2, 1, 3)
+    if kv_cache is not None:
+        k_all, v_all = kv_cache
+    else:
+        k_all, v_all = kk, vv
+    o = blocked_attention(q, k_all, v_all, causal=causal,
+                          q_chunk=cfg.q_chunk, lengths=lengths)
+    o = constrain(o, ("act_batch", "act_heads", "act_seq", None))
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(cdt), lp["wo"].astype(cdt))
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    return out, (kk, vv)
+
+
+def _ffn(x, lp, cfg: TransformerConfig):
+    cdt = cfg.compute_dtype
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        moe = _moe_ffn_einsum if cfg.moe_impl == "einsum" else _moe_ffn_sort
+        out, aux = moe(x, lp, cfg)
+        if cfg.moe_dense_residual:
+            out = out + _swiglu(x, lp["w_gate"].astype(cdt),
+                                lp["w_up"].astype(cdt), lp["w_down"].astype(cdt))
+        return out, aux
+    return _swiglu(x, lp["w_gate"].astype(cdt), lp["w_up"].astype(cdt),
+                   lp["w_down"].astype(cdt)), aux
+
+
+def _layer(x, lp, cfg, cos, sin):
+    a, _ = _attention(rms_norm(x, lp["ln1"]), lp, cfg, cos, sin, causal=True)
+    x = x + a
+    f, aux = _ffn(rms_norm(x, lp["ln2"]), lp, cfg)
+    return constrain(x + f, ("act_batch", "act_res_seq", "act_embed")), aux
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, tokens: jnp.ndarray, cfg: TransformerConfig) -> tuple:
+    """tokens: (B, S) int32 -> logits (B, S, V) in compute dtype, aux loss."""
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_embed"))
+    S = tokens.shape[1]
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_base)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer(x, lp, cfg, cos, sin)
+        return (x, aux + a), None
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"],
+                               unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cdt))
+    logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+    return logits, aux / cfg.n_layers
+
+
+def trunk(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Embedding + all layers + final norm (no vocab projection)."""
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_embed"))
+    S = tokens.shape[1]
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_base)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer(x, lp, cfg, cos, sin)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "full" else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"],
+                               unroll=cfg.scan_unroll)
+    return rms_norm(x, params["final_norm"]), aux / cfg.n_layers
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """Fused vocab projection + CE: the (B, S, V) logits never materialize."""
+    x, aux = trunk(params, batch["tokens"], cfg)
+    ce, zl = fused_ce_loss(
+        x, params["lm_head"], batch["labels"],
+        n_valid_vocab=cfg.vocab, z_loss=cfg.z_loss, chunk=cfg.ce_chunk)
+    return ce + zl + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------- serving
+def prefill(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Returns (last-token logits, kv cache stacked over layers)."""
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_embed"))
+    S = tokens.shape[1]
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_base)
+
+    def body(x, lp):
+        a, kv = _attention(rms_norm(x, lp["ln1"]), lp, cfg, cos, sin, causal=True)
+        x = x + a
+        f, _ = _ffn(rms_norm(x, lp["ln2"]), lp, cfg)
+        x = constrain(x + f, ("act_batch", "act_res_seq", "act_embed"))
+        kv = jax.tree.map(
+            lambda t: constrain(t, ("act_batch", "act_kv_heads", "cache_seq", None)), kv)
+        return x, kv
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "full" else body
+    x, cache = jax.lax.scan(body_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cdt))[:, 0]
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e9)
+    logits = constrain(logits, ("act_batch", "act_vocab"))
+    return logits, cache
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, lengths: jnp.ndarray,
+                cfg: TransformerConfig):
+    """One new token per batch row against a live KV cache.
+
+    cache: (k, v) each (L, B, Hkv, S_max, hd); tokens (B,); lengths (B,)
+    live-prefix lengths. Returns (logits (B, V), new cache, new lengths).
+    """
+    cdt = cfg.compute_dtype
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(cdt)  # (B,1,D)
+    cos, sin = rope_angles(lengths[:, None], cfg.head_dim, cfg.rope_base)  # (B,1,half)
+
+    def body(x, scanned):
+        lp, (k_l, v_l) = scanned
+        xn = rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["wq"].astype(cdt))
+        kk = jnp.einsum("bsd,dhk->bshk", xn, lp["wk"].astype(cdt))
+        vv = jnp.einsum("bsd,dhk->bshk", xn, lp["wv"].astype(cdt))
+        q = apply_rope(q, cos, sin).transpose(0, 2, 1, 3)       # (B,Hq,1,hd)
+        kk = apply_rope(kk, cos, sin).transpose(0, 2, 1, 3)     # (B,Hkv,1,hd)
+        vv = vv.transpose(0, 2, 1, 3)
+        bidx = jnp.arange(B)
+        k_l = k_l.at[bidx, :, lengths].set(kk[:, :, 0])
+        v_l = v_l.at[bidx, :, lengths].set(vv[:, :, 0])
+        k_l = constrain(k_l, ("act_batch", "act_kv_heads", "cache_seq", None))
+        v_l = constrain(v_l, ("act_batch", "act_kv_heads", "cache_seq", None))
+        o = blocked_attention(q, k_l, v_l, causal=False, q_chunk=8,
+                              lengths=lengths + 1)
+        a = jnp.einsum("bhsk,hkd->bsd", o.astype(cdt), lp["wo"].astype(cdt))
+        x = x + a
+        f, _ = _ffn(rms_norm(x, lp["ln2"]), lp, cfg)
+        return constrain(x + f, ("act_batch", "act_seq", "act_embed")), (k_l, v_l)
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cdt))[:, 0]
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e9)
+    logits = constrain(logits, ("act_batch", "act_vocab"))
+    return logits, new_cache, lengths + 1

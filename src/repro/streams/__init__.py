@@ -1,0 +1,15 @@
+from repro.streams.traces import (
+    Trace,
+    zipf_frequencies,
+    generate_trace,
+    shift_workload,
+    batched_playback,
+)
+
+__all__ = [
+    "Trace",
+    "zipf_frequencies",
+    "generate_trace",
+    "shift_workload",
+    "batched_playback",
+]

@@ -1,0 +1,29 @@
+# Tests must see the real single CPU device — never set
+# xla_force_host_platform_device_count here (dryrun.py owns that flag).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.bipartite import Bipartite, build_bipartite
+from repro.graphs.generators import rmat_graph, small_example_graph
+
+
+@pytest.fixture(scope="session")
+def example_bipartite() -> Bipartite:
+    return build_bipartite(small_example_graph())
+
+
+@pytest.fixture(scope="session")
+def rmat_bipartite() -> Bipartite:
+    return build_bipartite(rmat_graph(400, 2400, seed=7))
+
+
+def make_freqs(n: int, seed: int = 0, ratio: float = 1.0):
+    rng = np.random.default_rng(seed)
+    wf = rng.zipf(1.6, n).clip(1, 1000).astype(np.float64)
+    rf = (wf * ratio)[rng.permutation(n)]
+    return wf, rf

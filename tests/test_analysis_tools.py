@@ -1,0 +1,106 @@
+"""Dry-run/roofline analysis tooling: HLO collective parsing with while-loop
+trip counts, computation-block splitting, analytic model-FLOPs sanity."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (
+    _computation_blocks,
+    _effective_multipliers,
+    collective_bytes,
+)
+
+HLO = """\
+HloModule jit_step
+
+%region_cond (p0: (s32[], f32[4])) -> pred[] {
+  %p0 = (s32[], f32[4]) parameter(0)
+  %gte = s32[] get-tuple-element(%p0), index=0
+  %c7 = s32[] constant(7)
+  ROOT %lt = pred[] compare(%gte, %c7), direction=LT
+}
+
+%region_body (p0: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p0 = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p0), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}, to_apply=%add_comp
+  %i = s32[] get-tuple-element(%p0), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4]) tuple(%ip, %ar)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[4]) -> f32[4] {
+  %arg = f32[4] parameter(0)
+  %ag = f32[32]{0} all-gather(%arg), dimensions={0}
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[4]) tuple(%zero, %arg)
+  %w = (s32[], f32[4]) while(%tup), condition=%region_cond, body=%region_body
+  ROOT %out = f32[4] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_computation_blocks():
+    comps = _computation_blocks(HLO)
+    assert set(comps) == {"region_cond", "region_body", "add_comp", "main"}
+    assert any("while(" in ls for ls in comps["main"])
+
+
+def test_effective_multipliers_trip_count():
+    comps = _computation_blocks(HLO)
+    mult = _effective_multipliers(comps)
+    assert mult["main"] == 1.0
+    assert mult["region_body"] == 7.0
+
+
+def test_collective_bytes_with_loops():
+    coll = collective_bytes(HLO)
+    # entry all-gather counted once: f32[32] = 128 B
+    assert coll["all-gather"] == 128.0
+    # loop all-reduce f32[4] = 16 B x 7 trips
+    assert coll["all-reduce"] == 16.0 * 7
+
+
+def test_model_flops_lm_magnitudes():
+    from repro.launch.roofline import model_flops
+    mf, n_active = model_flops("granite-3-2b", "train_4k")
+    # ~2.5e9 active params, 1.05e6 tokens: 6ND ~ 1.6e16 + attention
+    assert 1e16 < mf < 1e17
+    assert 2e9 < n_active < 4e9
+    mf_moe, n_act_moe = model_flops("arctic-480b", "train_4k")
+    # arctic active ~ 17B + dense residual: far below total 480B
+    assert n_act_moe < 6e10
+    mf_d, _ = model_flops("granite-3-2b", "decode_32k")
+    assert mf_d < mf / 100      # one token vs a full batch of sequences
+
+
+def test_model_flops_every_cell_defined():
+    from repro.configs import all_cells
+    from repro.launch.roofline import model_flops
+    for a, s in all_cells():
+        mf, _ = model_flops(a, s)
+        assert mf and mf > 0, (a, s)
+
+
+def test_roofline_analyze_shapes():
+    from repro.launch.roofline import analyze, format_table
+    rec = dict(arch="granite-3-2b", shape="train_4k",
+               mesh={"data": 16, "model": 16}, temp_bytes=10 ** 9,
+               arg_bytes=0, out_bytes=0, alias_bytes=0,
+               flops=1e12, bytes_accessed=1e11,
+               collective_bytes={"all-reduce": 1e9},
+               notes="accum=4 opt=adamw step_multiplier=4")
+    rows = analyze([rec])
+    r = rows[0]
+    # step_multiplier applied
+    np.testing.assert_allclose(r["t_compute_s"], 4e12 / 197e12)
+    np.testing.assert_allclose(r["t_collective_s"], 4e9 / 100e9)
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert r["roofline_fraction"] and 0 < r["roofline_fraction"]
+    assert "granite" in format_table(rows)

@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (the required deliverable): every assigned
+architecture instantiates a REDUCED config of the same family and runs one
+forward/train step on CPU, asserting output shapes + no NaNs. The full
+configs are exercised only via the dry-run (ShapeDtypeStruct, no alloc)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_cells, get_arch
+
+CELLS = all_cells()
+
+
+def test_forty_cells_assigned():
+    assert len(CELLS) == 40
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("arch_id,shape", CELLS,
+                         ids=[f"{a}-{s}" for a, s in CELLS])
+def test_smoke_cell(arch_id, shape):
+    arch = get_arch(arch_id)
+    plan = arch.build_smoke(shape)
+    out = jax.jit(plan.fn)(*plan.args) if plan.args else plan.fn()
+    leaves = [x for x in jax.tree.leaves(out) if hasattr(x, "dtype")]
+    assert leaves, "smoke cell produced no outputs"
+    for x in leaves:
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            assert bool(jnp.isfinite(x).all()), f"{arch_id}/{shape}: NaN/Inf"
+    if plan.kind == "train":
+        params, opt_state, metrics = out
+        assert np.isfinite(float(metrics["loss"]))
+        # one step actually changed the parameters
+        before = jax.tree.leaves(plan.args[0])
+        after = jax.tree.leaves(params)
+        assert any(not np.allclose(np.asarray(a), np.asarray(b))
+                   for a, b in zip(before, after))
+
+
+def test_eagr_reference_smoke():
+    arch = get_arch("eagr")
+    plan = arch.build_smoke("stream_mixed")
+    out = plan.fn()
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The full (non-smoke) configs carry the exact assigned hyperparameters."""
+    arch = get_arch(arch_id)
+    assigned = {
+        "granite-3-2b": dict(n_layers=40, d_model=2048, n_heads=32,
+                             n_kv_heads=8, d_ff=8192, vocab=49155),
+        "internlm2-1.8b": dict(n_layers=24, d_model=2048, n_heads=16,
+                               n_kv_heads=8, d_ff=8192, vocab=92544),
+        "command-r-plus-104b": dict(n_layers=64, d_model=12288, n_heads=96,
+                                    n_kv_heads=8, d_ff=33792, vocab=256000),
+        "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56,
+                            n_kv_heads=8, d_ff=4864, vocab=32000,
+                            n_experts=128, top_k=2),
+        "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48,
+                          n_kv_heads=8, d_ff=10752, vocab=100352,
+                          n_experts=16, top_k=4),
+    }
+    if arch_id in assigned:
+        import repro.configs as C
+        import importlib
+        mod = importlib.import_module(C._MODULES[arch_id])
+        cfg = mod.ARCH  # ArchSpec
+        from repro.configs.lm_common import LMArch  # noqa: F401
+        # reach the TransformerConfig through the build closure's lm
+        lm_cfg = mod.ARCH.build.__closure__
+        # simpler: import the module-level config via its source LMArch
+        tcfg = [c.cell_contents for c in lm_cfg
+                if hasattr(c.cell_contents, "cfg")][0].cfg
+        for k, v in assigned[arch_id].items():
+            assert getattr(tcfg, k) == v, (arch_id, k)
+    elif arch_id == "graphcast":
+        from repro.configs.graphcast import CFG
+        assert (CFG.n_layers, CFG.d_hidden, CFG.mesh_refinement, CFG.n_vars) \
+            == (16, 512, 6, 227)
+    elif arch_id == "gat-cora":
+        from repro.configs.gat_cora import _mk
+        c = _mk(dict(d_feat=1433, classes=7), False)
+        assert (c.n_layers, c.d_hidden, c.n_heads) == (2, 8, 8)
+    elif arch_id == "nequip":
+        from repro.configs.nequip import CFG
+        assert (CFG.n_layers, CFG.d_hidden, CFG.l_max, CFG.n_rbf,
+                CFG.cutoff) == (5, 32, 2, 8, 5.0)
+    elif arch_id == "gatedgcn":
+        from repro.configs.gatedgcn import _mk
+        c = _mk(dict(d_feat=100, classes=47), False)
+        assert (c.n_layers, c.d_hidden) == (16, 70)
+    elif arch_id == "dien":
+        from repro.configs.dien import CFG
+        assert (CFG.embed_dim, CFG.seq_len, CFG.gru_dim, CFG.mlp_dims) \
+            == (18, 100, 108, (200, 80))

@@ -1,0 +1,172 @@
+"""Dataflow decisions: optimality of the min-cut algorithm (vs brute force),
+pruning soundness (Theorem 4.2), greedy validity, node splitting, adaptation.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_freqs
+from repro.core import dataflow as D
+from repro.core.overlay import Overlay
+from repro.core.vnm import construct_vnm
+from repro.graphs.generators import rmat_graph
+from repro.core.bipartite import build_bipartite
+
+
+def _valid(overlay: Overlay, dec: np.ndarray) -> bool:
+    """No edge from a PULL node into a PUSH node (paper §2.2.1)."""
+    for dst in range(overlay.n_nodes):
+        for src, _ in overlay.in_edges[dst]:
+            if dec[src] == D.PULL and dec[dst] == D.PUSH:
+                return False
+    return all(dec[v] == D.PUSH for v in overlay.writer_nodes())
+
+
+def _brute_force(overlay: Overlay, f_h, f_l, cost, window=1) -> float:
+    push, pull = D.push_pull_costs(overlay, f_h, f_l, cost, window)
+    writers = set(overlay.writer_nodes())
+    free = [v for v in range(overlay.n_nodes) if v not in writers]
+    best = np.inf
+    for bits in itertools.product([D.PUSH, D.PULL], repeat=len(free)):
+        dec = np.zeros(overlay.n_nodes, dtype=np.int64)
+        for v, b in zip(free, bits):
+            dec[v] = b
+        if not _valid(overlay, dec):
+            continue
+        best = min(best, float(np.where(dec == D.PUSH, push, pull).sum()))
+    return best
+
+
+@st.composite
+def small_overlay(draw):
+    """Random small layered DAG overlay with frequencies."""
+    n_w = draw(st.integers(2, 4))
+    n_i = draw(st.integers(0, 3))
+    n_r = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 99999))
+    rng = np.random.default_rng(seed)
+    ov = Overlay(kinds=[], origin=[], in_edges=[])
+    ws = [ov.add_node("W", i) for i in range(n_w)]
+    iis = []
+    for j in range(n_i):
+        v = ov.add_node("I", -1)
+        srcs = rng.choice(ws + iis, size=rng.integers(1, 3), replace=False)
+        for s in srcs:
+            ov.add_edge(int(s), v)
+        iis.append(v)
+    for r in range(n_r):
+        v = ov.add_node("R", 100 + r)
+        pool = ws + iis
+        srcs = rng.choice(pool, size=rng.integers(1, min(3, len(pool)) + 1),
+                          replace=False)
+        for s in srcs:
+            ov.add_edge(int(s), v)
+    wf = np.zeros(200)
+    rf = np.zeros(200)
+    wf[:n_w] = rng.integers(1, 50, n_w)
+    rf[100:100 + n_r] = rng.integers(1, 50, n_r)
+    return ov, wf, rf
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_overlay(), st.sampled_from(["sum", "max"]))
+def test_mincut_optimal_vs_bruteforce(ovwfrf, aggname):
+    ov, wf, rf = ovwfrf
+    ov = ov.pruned()
+    if not ov.reader_nodes():
+        return
+    cost = D.cost_model_for(aggname)
+    dec, _ = D.decide_mincut(ov, wf, rf, cost)
+    assert _valid(ov, dec)
+    f_h, f_l = D.compute_frequencies(ov, wf, rf)
+    got = D.total_cost(ov, dec, f_h, f_l, cost)
+    best = _brute_force(ov, f_h, f_l, cost)
+    assert got <= best + 1e-6, (got, best)
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_overlay())
+def test_greedy_valid_and_never_better_than_mincut(ovwfrf):
+    ov, wf, rf = ovwfrf
+    ov = ov.pruned()
+    if not ov.reader_nodes():
+        return
+    cost = D.cost_model_for("sum")
+    dec_g = D.decide_greedy(ov, wf, rf, cost)
+    assert _valid(ov, dec_g)
+    dec_m, _ = D.decide_mincut(ov, wf, rf, cost)
+    f_h, f_l = D.compute_frequencies(ov, wf, rf)
+    assert (D.total_cost(ov, dec_m, f_h, f_l, cost)
+            <= D.total_cost(ov, dec_g, f_h, f_l, cost) + 1e-6)
+
+
+def test_pruning_preserves_optimality_and_shrinks(rmat_bipartite):
+    ov, _ = construct_vnm(rmat_bipartite, variant="vnm_a", max_iterations=3)
+    wf, rf = make_freqs(rmat_bipartite.n_base, seed=1)
+    cost = D.cost_model_for("sum")
+    dec, stats = D.decide_mincut(ov, wf, rf, cost)
+    assert _valid(ov, dec)
+    assert stats.pruned_fraction > 0.5  # paper fig 12: >86% pruned typically
+    # all-push / all-pull are never better
+    f_h, f_l = D.compute_frequencies(ov, wf, rf)
+    c = D.total_cost(ov, dec, f_h, f_l, cost)
+    all_push = np.full(ov.n_nodes, D.PUSH)
+    all_pull = np.array([D.PUSH if ov.kinds[v] == "W" else D.PULL
+                         for v in range(ov.n_nodes)])
+    assert c <= D.total_cost(ov, all_push, f_h, f_l, cost) + 1e-6
+    assert c <= D.total_cost(ov, all_pull, f_h, f_l, cost) + 1e-6
+
+
+@pytest.mark.parametrize("ratio", [0.1, 1.0, 10.0])
+def test_ratio_shifts_decisions(rmat_bipartite, ratio):
+    """Write-heavy workloads should pull more; read-heavy should push more."""
+    ov, _ = construct_vnm(rmat_bipartite, variant="vnm_a", max_iterations=3)
+    wf, rf = make_freqs(rmat_bipartite.n_base, seed=2, ratio=ratio)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    assert _valid(ov, dec)
+
+
+def test_split_nodes_reduces_cost(rmat_bipartite):
+    ov, _ = construct_vnm(rmat_bipartite, variant="vnm_a", max_iterations=3)
+    wf, rf = make_freqs(rmat_bipartite.n_base, seed=3)
+    cost = D.cost_model_for("sum")
+    dec, _ = D.decide_mincut(ov, wf, rf, cost)
+    f_h, f_l = D.compute_frequencies(ov, wf, rf)
+    before = D.total_cost(ov, dec, f_h, f_l, cost)
+    ov2, dec2, n_split = D.split_nodes(ov, dec, wf, rf, cost)
+    assert _valid(ov2, dec2)
+    f_h2, f_l2 = D.compute_frequencies(ov2, wf, rf)
+    after = D.total_cost(ov2, dec2, f_h2, f_l2, cost)
+    if n_split:
+        assert after <= before + 1e-6
+    # split overlay still computes the right answers
+    ov2.validate(rmat_bipartite.reader_input_sets())
+
+
+def test_adaptation_moves_toward_new_optimum(rmat_bipartite):
+    ov, _ = construct_vnm(rmat_bipartite, variant="vnm_a", max_iterations=3)
+    wf, rf = make_freqs(rmat_bipartite.n_base, seed=4)
+    cost = D.cost_model_for("sum")
+    dec, _ = D.decide_mincut(ov, wf, rf, cost)
+    # the workload flips: reads 10x writes
+    wf2, rf2 = wf * 0.1, rf * 10
+    f_h2, f_l2 = D.compute_frequencies(ov, wf2, rf2)
+    before = D.total_cost(ov, dec, f_h2, f_l2, cost)
+    dec2, n_flips = D.adapt_decisions(ov, dec, wf2, rf2, cost)
+    assert _valid(ov, dec2)
+    after = D.total_cost(ov, dec2, f_h2, f_l2, cost)
+    assert after <= before + 1e-6
+    if n_flips:
+        assert after < before
+
+
+def test_calibrated_cost_model():
+    """Calibration measures wall time, so monotonicity is load-sensitive;
+    assert the structural contract only (positive costs, H normalized)."""
+    from repro.core.aggregates import make_aggregate
+    cm = D.calibrate_cost_model(make_aggregate("sum"))
+    assert cm.L(1) >= 1.0 and cm.L(16) >= 1.0
+    assert cm.H(4) == 1.0
+    assert cm.name == "calibrated"

@@ -1,0 +1,215 @@
+"""GNN models: segment message passing vs dense reference, equivariance,
+masking invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import init_from_specs
+from repro.models.gnn import gat, gatedgcn, graphcast, nequip
+from repro.models.gnn.common import GraphBatch, agg_sum, segment_softmax
+from repro.models.gnn.equivariant import (
+    intertwiner,
+    random_rotation,
+    real_sph_harm,
+    wigner_d,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _batch(n=40, e=160, f=12, classes=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return GraphBatch(
+        x=jnp.asarray(rng.normal(size=(n, f)).astype(np.float32)),
+        edge_src=jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+        edge_dst=jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+        edge_mask=jnp.ones(e, bool), node_mask=jnp.ones(n, bool),
+        labels=jnp.asarray(rng.integers(0, classes, n).astype(np.int32)),
+        label_mask=jnp.ones(n, bool))
+
+
+def test_segment_softmax_vs_dense():
+    n, e = 10, 60
+    dst = jnp.asarray(RNG.integers(0, n, e).astype(np.int32))
+    scores = jnp.asarray(RNG.normal(size=(e, 3)).astype(np.float32))
+    alpha = np.asarray(segment_softmax(scores, dst, n))
+    for v in range(n):
+        idx = np.asarray(dst) == v
+        if idx.any():
+            want = np.exp(np.asarray(scores)[idx])
+            want /= want.sum(axis=0, keepdims=True)
+            np.testing.assert_allclose(alpha[idx], want, rtol=1e-5, atol=1e-6)
+    # masked rows sum to 1 per destination
+    sums = np.asarray(jax.ops.segment_sum(jnp.asarray(alpha), dst, num_segments=n))
+    present = np.asarray(jax.ops.segment_sum(jnp.ones(e), dst, num_segments=n)) > 0
+    np.testing.assert_allclose(sums[present], 1.0, rtol=1e-5)
+
+
+def test_gat_vs_dense_reference():
+    """GAT layer == dense-adjacency attention on a small graph."""
+    cfg = gat.GATConfig(n_layers=1, d_hidden=6, n_heads=2, d_in=5, n_classes=6)
+    params = init_from_specs(gat.param_specs(cfg), jax.random.PRNGKey(0))
+    b = _batch(n=12, e=40, f=5, seed=1)
+    out = np.asarray(gat.forward(params, b, cfg))
+    # dense reference
+    p = params["layer0"]
+    x = np.asarray(b.x)
+    h = np.einsum("nf,fho->nho", x, np.asarray(p["w"]))
+    es = np.einsum("nho,ho->nh", h, np.asarray(p["a_src"]))
+    ed = np.einsum("nho,ho->nh", h, np.asarray(p["a_dst"]))
+    n = x.shape[0]
+    ref = np.zeros_like(out)
+    src, dst = np.asarray(b.edge_src), np.asarray(b.edge_dst)
+    for v in range(n):
+        idx = np.nonzero(dst == v)[0]
+        acc = np.zeros((2, 6))
+        if idx.size:
+            s = es[src[idx]] + ed[v]
+            s = np.where(s > 0, s, 0.2 * s)
+            a = np.exp(s - s.max(axis=0))
+            a /= a.sum(axis=0)
+            acc = (h[src[idx]] * a[:, :, None]).sum(axis=0)
+        ref[v] = (acc + np.asarray(p["bias"])).mean(axis=0)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_gat_ignores_masked_edges():
+    cfg = gat.GATConfig(n_layers=2, d_hidden=4, n_heads=2, d_in=5, n_classes=3)
+    params = init_from_specs(gat.param_specs(cfg), jax.random.PRNGKey(1))
+    b = _batch(n=20, e=80, f=5, classes=3, seed=2)
+    import dataclasses as dc
+    # masking an edge == deleting it
+    mask = np.ones(80, bool); mask[13] = False
+    b_masked = dc.replace(b, edge_mask=jnp.asarray(mask))
+    keep = np.nonzero(mask)[0]
+    b_deleted = dc.replace(
+        b, edge_src=b.edge_src[keep], edge_dst=b.edge_dst[keep],
+        edge_mask=jnp.ones(len(keep), bool))
+    o1 = np.asarray(gat.forward(params, b_masked, cfg))
+    o2 = np.asarray(gat.forward(params, b_deleted, cfg))
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-5)
+
+
+def test_gatedgcn_runs_and_trains():
+    cfg = gatedgcn.GatedGCNConfig(n_layers=3, d_hidden=16, d_in=12, n_classes=5)
+    params = init_from_specs(gatedgcn.param_specs(cfg), jax.random.PRNGKey(2))
+    b = _batch(seed=3)
+    loss, _ = gatedgcn.loss_fn(params, b, cfg)
+    g = jax.grad(lambda p: gatedgcn.loss_fn(p, b, cfg)[0])(params)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+def test_graphcast_mesh_sizes():
+    assert graphcast.mesh_sizes(0) == (12, 60)
+    assert graphcast.mesh_sizes(6) == (40962, 2 * 163830)
+
+
+def test_graphcast_forward_shapes():
+    cfg = graphcast.GraphCastConfig(n_layers=2, d_hidden=16, mesh_refinement=1,
+                                    n_vars=4, compute_dtype=jnp.float32)
+    params = init_from_specs(graphcast.param_specs(cfg), jax.random.PRNGKey(3))
+    G, M, Em = 30, cfg.n_mesh, cfg.n_mesh_edges
+    rng = np.random.default_rng(4)
+    b = graphcast.GraphCastBatch(
+        grid_x=jnp.asarray(rng.normal(size=(G, 4)).astype(np.float32)),
+        g2m_src=jnp.asarray(rng.integers(0, G, 90).astype(np.int32)),
+        g2m_dst=jnp.asarray(rng.integers(0, M, 90).astype(np.int32)),
+        mesh_src=jnp.asarray(rng.integers(0, M, Em).astype(np.int32)),
+        mesh_dst=jnp.asarray(rng.integers(0, M, Em).astype(np.int32)),
+        m2g_src=jnp.asarray(rng.integers(0, M, 90).astype(np.int32)),
+        m2g_dst=jnp.asarray(rng.integers(0, G, 90).astype(np.int32)),
+        targets=jnp.zeros((G, 4)))
+    out = graphcast.forward(params, b, cfg)
+    assert out.shape == (G, 4) and bool(jnp.isfinite(out).all())
+
+
+# ------------------------------------------------------------- equivariance
+@pytest.mark.parametrize("l", [1, 2, 3])
+def test_wigner_d_is_representation(l):
+    R1, R2 = random_rotation(), random_rotation()
+    D12 = wigner_d(l, R1 @ R2)
+    err = np.abs(D12 - wigner_d(l, R1) @ wigner_d(l, R2)).max()
+    assert err < 1e-10
+    D = wigner_d(l, R1)
+    assert np.abs(D @ D.T - np.eye(2 * l + 1)).max() < 1e-10
+
+
+@pytest.mark.parametrize("lll", [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1),
+                                 (2, 2, 2), (2, 2, 0), (0, 1, 1)])
+def test_intertwiner_equivariance(lll):
+    l1, l2, l3 = lll
+    T = intertwiner(l1, l2, l3)
+    R = random_rotation()
+    D1, D2, D3 = wigner_d(l1, R), wigner_d(l2, R), wigner_d(l3, R)
+    u = RNG.normal(size=2 * l1 + 1)
+    v = RNG.normal(size=2 * l2 + 1)
+    lhs = np.einsum("kij,i,j->k", T, D1 @ u, D2 @ v)
+    rhs = D3 @ np.einsum("kij,i,j->k", T, u, v)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+
+def test_intertwiner_special_cases():
+    T110 = intertwiner(1, 1, 0) * np.sqrt(3.0)
+    np.testing.assert_allclose(T110[0], np.eye(3), atol=1e-10)   # dot product
+    T111 = intertwiner(1, 1, 1)
+    np.testing.assert_allclose(T111, -T111.transpose(0, 2, 1), atol=1e-10)  # cross
+    assert intertwiner(0, 1, 2) is None  # outside CG range
+
+
+def test_sph_harm_rotation_covariance():
+    R = random_rotation()
+    pts = RNG.normal(size=(20, 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    for l in (1, 2):
+        D = wigner_d(l, R)
+        np.testing.assert_allclose(
+            real_sph_harm(l, pts @ R.T), real_sph_harm(l, pts) @ D.T, atol=1e-10)
+
+
+def test_nequip_energy_invariance_force_equivariance():
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, n_species=4)
+    params = init_from_specs(nequip.param_specs(cfg), jax.random.PRNGKey(5))
+    rng = np.random.default_rng(6)
+    N, E, G = 24, 80, 2
+    pos = jnp.asarray(rng.normal(size=(N, 3)).astype(np.float32) * 2)
+    spec = jnp.asarray(rng.integers(0, 4, N).astype(np.int32))
+    es = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    ed = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    em = jnp.asarray(np.asarray(es) != np.asarray(ed))
+    nm = jnp.ones(N, bool)
+    gid = jnp.asarray((np.arange(N) >= 12).astype(np.int32))
+    R = jnp.asarray(random_rotation().astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    e1, f1, _ = nequip.energy_and_forces(params, pos, spec, es, ed, em, nm, gid, G, cfg)
+    e2, f2, _ = nequip.energy_and_forces(params, pos @ R.T + t, spec, es, ed,
+                                         em, nm, gid, G, cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1) @ np.asarray(R).T, np.asarray(f2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_nequip_permutation_invariance():
+    """Energy must be invariant under atom relabeling."""
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, n_species=4)
+    params = init_from_specs(nequip.param_specs(cfg), jax.random.PRNGKey(7))
+    rng = np.random.default_rng(8)
+    N, E = 16, 48
+    pos = rng.normal(size=(N, 3)).astype(np.float32) * 2
+    spec = rng.integers(0, 4, N).astype(np.int32)
+    es = rng.integers(0, N, E).astype(np.int32)
+    ed = rng.integers(0, N, E).astype(np.int32)
+    gid = np.zeros(N, np.int32)
+    e1 = nequip.forward_energy(params, jnp.asarray(pos), jnp.asarray(spec),
+                               jnp.asarray(es), jnp.asarray(ed),
+                               jnp.asarray(es != ed), jnp.ones(N, bool),
+                               jnp.asarray(gid), 1, cfg)
+    perm = rng.permutation(N)
+    inv = np.argsort(perm)
+    e2 = nequip.forward_energy(params, jnp.asarray(pos[perm]),
+                               jnp.asarray(spec[perm]),
+                               jnp.asarray(inv[es]), jnp.asarray(inv[ed]),
+                               jnp.asarray(es != ed), jnp.ones(N, bool),
+                               jnp.asarray(gid), 1, cfg)
+    np.testing.assert_allclose(float(e1[0]), float(e2[0]), rtol=1e-4)

@@ -1,0 +1,157 @@
+"""LM transformer family: loss sanity, MoE dispatch equivalence, decode vs
+prefill consistency, fused CE vs naive CE, vocab padding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.common import fused_ce_loss, init_from_specs
+
+CFG = T.TransformerConfig(
+    name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=97, head_dim=16, compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_from_specs(T.param_specs(CFG), jax.random.PRNGKey(0))
+
+
+def test_vocab_padding():
+    assert CFG.padded_vocab == 128
+    specs = T.param_specs(CFG)
+    assert specs["embed"].shape[0] == 128
+    assert specs["lm_head"].shape[1] == 128
+
+
+def test_loss_finite_and_grads(params):
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, batch, CFG), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+def test_fused_ce_matches_naive(params):
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (2, 32), 0, CFG.vocab)
+    labels = jax.random.randint(key, (2, 32), 0, CFG.vocab)
+    x, _ = T.trunk(params, tokens, CFG)
+    ce, zl = fused_ce_loss(x, params["lm_head"], labels,
+                           n_valid_vocab=CFG.vocab, z_loss=1e-4, chunk=8)
+    # naive: full logits with padded-vocab masking
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    logits = jnp.where(jnp.arange(CFG.padded_vocab) < CFG.vocab, logits, -jnp.inf)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(float(ce), float(jnp.mean(lse - ll)), rtol=1e-5)
+    np.testing.assert_allclose(float(zl), float(1e-4 * jnp.mean(lse ** 2)), rtol=1e-5)
+
+
+def test_fused_ce_gradient_matches_naive(params):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 16, CFG.d_model))
+    labels = jax.random.randint(key, (2, 16), 0, CFG.vocab)
+
+    def fused(w):
+        ce, zl = fused_ce_loss(x, w, labels, n_valid_vocab=CFG.vocab,
+                               z_loss=1e-4, chunk=4)
+        return ce + zl
+
+    def naive(w):
+        logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+        logits = jnp.where(jnp.arange(w.shape[1]) < CFG.vocab, logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - ll) + 1e-4 * jnp.mean(lse ** 2)
+
+    g1 = jax.grad(fused)(params["lm_head"])
+    g2 = jax.grad(naive)(params["lm_head"])
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_moe_einsum_vs_sort_dispatch():
+    cfg_e = T.TransformerConfig(
+        name="m", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab=31, head_dim=16, n_experts=4, top_k=2, moe_impl="einsum",
+        capacity_factor=8.0, compute_dtype=jnp.float32, remat="none")
+    cfg_s = dataclasses.replace(cfg_e, moe_impl="sort")
+    p = init_from_specs(T.param_specs(cfg_e), jax.random.PRNGKey(2))
+    tok = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, 31)
+    le, _ = T.forward(p, tok, cfg_e)
+    ls, _ = T.forward(p, tok, cfg_s)
+    np.testing.assert_allclose(np.asarray(le), np.asarray(ls),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens_consistently():
+    """With tiny capacity both impls drop; outputs stay finite."""
+    cfg = T.TransformerConfig(
+        name="m", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab=31, head_dim=16, n_experts=4, top_k=2, moe_impl="sort",
+        capacity_factor=0.5, compute_dtype=jnp.float32, remat="none")
+    p = init_from_specs(T.param_specs(cfg), jax.random.PRNGKey(4))
+    tok = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, 31)
+    logits, aux = T.forward(p, tok, cfg)
+    assert bool(jnp.isfinite(logits).all()) and np.isfinite(float(aux))
+
+
+def test_decode_matches_prefill(params):
+    key = jax.random.PRNGKey(6)
+    tokens = jax.random.randint(key, (2, 12), 0, CFG.vocab)
+    logits, cache = T.prefill(params, tokens, CFG)
+    next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    S_max = 16
+    k = jnp.pad(cache[0], ((0, 0), (0, 0), (0, 0), (0, S_max - 12), (0, 0)))
+    v = jnp.pad(cache[1], ((0, 0), (0, 0), (0, 0), (0, S_max - 12), (0, 0)))
+    lengths = jnp.full((2,), 12, jnp.int32)
+    lg2, _, lens2 = T.decode_step(params, (k, v), next_tok, lengths, CFG)
+    ref, _ = T.prefill(params, jnp.concatenate([tokens, next_tok[:, None]], 1), CFG)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    assert (np.asarray(lens2) == 13).all()
+
+
+def test_decode_respects_ragged_lengths(params):
+    """Rows with different cache lengths decode independently."""
+    key = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(key, (2, 12), 0, CFG.vocab)
+    _, cache = T.prefill(params, tokens, CFG)
+    S_max = 16
+    k = jnp.pad(cache[0], ((0, 0), (0, 0), (0, 0), (0, S_max - 12), (0, 0)))
+    v = jnp.pad(cache[1], ((0, 0), (0, 0), (0, 0), (0, S_max - 12), (0, 0)))
+    tok = jnp.array([1, 2], jnp.int32)
+    lengths = jnp.array([5, 12], jnp.int32)
+    lg, _, _ = T.decode_step(params, (k, v), tok, lengths, CFG)
+    # row 0 must equal decoding with a cache truncated to 5
+    _, cache5 = T.prefill(params, tokens[:, :5], CFG)
+    k5 = jnp.pad(cache5[0], ((0, 0), (0, 0), (0, 0), (0, S_max - 5), (0, 0)))
+    v5 = jnp.pad(cache5[1], ((0, 0), (0, 0), (0, 0), (0, S_max - 5), (0, 0)))
+    lg5, _, _ = T.decode_step(params, (k5, v5), tok, jnp.array([5, 5], jnp.int32), CFG)
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(lg5[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_remat_matches_no_remat(params):
+    cfg_n = dataclasses.replace(CFG, remat="none")
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    l1, _ = T.loss_fn(params, batch, CFG)
+    l2, _ = T.loss_fn(params, batch, cfg_n)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_scan_unroll_equivalence(params):
+    cfg_u = dataclasses.replace(CFG, scan_unroll=CFG.n_layers)
+    tok = jnp.ones((2, 8), jnp.int32)
+    l1, _ = T.forward(params, tok, CFG)
+    l2, _ = T.forward(params, tok, cfg_u)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5,
+                               atol=1e-5)
