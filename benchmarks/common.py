@@ -48,6 +48,7 @@ def make_system(
     hops: int = 1,
     split: bool = False,
     seed: int = 0,
+    backend: str | None = None,       # engine substrate: pallas | xla | xla_unrolled
 ):
     """Graph -> bipartite -> overlay -> decisions -> engine + trace freqs."""
     g = rmat_graph(n_nodes, n_edges, seed=seed)
@@ -78,7 +79,7 @@ def make_system(
                                    cm, window=window)
     agg = (make_aggregate(aggregate, k=5, domain=64) if aggregate == "topk"
            else make_aggregate(aggregate))
-    eng = EagrEngine(ov, dec, agg, WindowSpec("tuple", window))
+    eng = EagrEngine(ov, dec, agg, WindowSpec("tuple", window), backend=backend)
     return eng, bp, g, stats
 
 

@@ -1,0 +1,126 @@
+"""Old-vs-new execution substrate benchmark -> BENCH_engine.json.
+
+Compares the legacy per-level Python unroll ('xla_unrolled', the pre-refactor
+program structure) against the unified leveled-CSR substrate ('xla' fallback,
+plus 'pallas' when a TPU is attached) on a Zipfian read/write trace:
+
+  * update (write) throughput, events/s
+  * query (read) throughput, events/s
+  * plan compile time (host) and first-batch jit time per path
+
+The JSON is written to the repo root so successive PRs extend the perf
+trajectory. Run:  PYTHONPATH=src python -m benchmarks.run --engine [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_system
+from repro.streams.traces import generate_trace
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+
+
+def _measure(eng, bp, *, n_events, write_read_ratio, batch, seed=1):
+    """Update and query throughput over one Zipfian trace, phase-separated:
+    writes replay in full ``batch``-row batches, then reads — so the numbers
+    measure the substrate, not the tiny homogeneous runs an interleaved
+    replay produces (mean run length ~2 at a 1:1 ratio)."""
+    readers = np.array(list(bp.reader_inputs))
+    trace = generate_trace(bp.writers, readers, n_events,
+                           write_read_ratio=write_read_ratio, seed=seed)
+    from repro.streams.traces import WRITE
+    wsel = trace.kind == WRITE
+    w_ids, w_vals = trace.node[wsel], trace.value[wsel]
+    r_ids = trace.node[~wsel]
+
+    def chunks(a):
+        return [a[i: i + batch] for i in range(0, len(a) - batch + 1, batch)]
+
+    # warmup = compile both programs once
+    t0 = time.perf_counter()
+    eng.write_batch(w_ids[:batch], w_vals[:batch], batch_size=batch)
+    eng.read_batch(r_ids[:batch], batch_size=batch)
+    jax.block_until_ready(eng.state.pao)
+    jit_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    n_w = 0
+    for ids, vals in zip(chunks(w_ids), chunks(w_vals)):
+        eng.write_batch(ids, vals, batch_size=batch)
+        n_w += len(ids)
+    jax.block_until_ready(eng.state.pao)
+    t_w = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    n_r = 0
+    for ids in chunks(r_ids):
+        eng.read_batch(ids, batch_size=batch)  # device_get syncs per batch
+        n_r += len(ids)
+    t_r = time.perf_counter() - t0
+    return {
+        "write_events_per_s": round(n_w / t_w) if t_w else None,
+        "read_events_per_s": round(n_r / t_r) if t_r else None,
+        "events_per_s": round((n_w + n_r) / (t_w + t_r)) if t_w + t_r else None,
+        "first_batches_jit_s": round(jit_s, 3),
+    }
+
+
+def run_engine_bench(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    graph = dict(n_nodes=4_000, n_edges=24_000) if quick else \
+        dict(n_nodes=12_000, n_edges=72_000)
+    n_events = 20_000 if quick else 60_000
+    batch = 1024 if quick else 2048
+    backends = ["xla_unrolled", "xla"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+
+    report = {
+        "bench": "engine_substrate",
+        "device": jax.default_backend(),
+        "graph": graph,
+        "n_events": n_events,
+        "batch": batch,
+        "trace": "zipf(alpha=1.0), write:read=1.0",
+        "substrates": {},
+    }
+    for backend in backends:
+        t0 = time.perf_counter()
+        eng, bp, _, _ = make_system(algorithm="vnm_a", backend=backend, **graph)
+        build_s = time.perf_counter() - t0
+        from repro.core.engine import compile_plan
+        t0 = time.perf_counter()
+        compile_plan(eng.overlay, eng.plan.decision, backend=backend)
+        compile_s = time.perf_counter() - t0
+        res = _measure(eng, bp, n_events=n_events, write_read_ratio=1.0,
+                       batch=batch)
+        res["plan_compile_s"] = round(compile_s, 3)
+        res["system_build_s"] = round(build_s, 3)  # graph+overlay+mincut+plan
+        res["overlay_depth"] = eng.plan.depth
+        res["padded_levels"] = eng.plan.meta.n_levels
+        res["push_edges"] = eng.plan.n_push_edges
+        res["pull_edges"] = eng.plan.n_pull_edges
+        report["substrates"][backend] = res
+        print(f"engine/{backend}: {res}", flush=True)
+
+    old = report["substrates"].get("xla_unrolled", {})
+    new = report["substrates"].get(
+        "pallas" if "pallas" in report["substrates"] else "xla", {})
+    if old.get("events_per_s") and new.get("events_per_s"):
+        report["speedup_new_vs_old"] = round(
+            new["events_per_s"] / old["events_per_s"], 3)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    run_engine_bench(quick="--quick" in sys.argv)

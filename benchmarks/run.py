@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig14a --quick
+  PYTHONPATH=src python -m benchmarks.run --engine   # substrate bench -> BENCH_engine.json
 """
 from __future__ import annotations
 
@@ -15,7 +16,15 @@ def main(argv=None) -> None:
     p.add_argument("--only", default=None, help="substring filter, e.g. fig12")
     p.add_argument("--quick", action="store_true",
                    help="smaller graphs/budgets (CI mode)")
+    p.add_argument("--engine", action="store_true",
+                   help="run the old-vs-new substrate benchmark and emit "
+                        "BENCH_engine.json (skips the paper figures)")
     args = p.parse_args(argv)
+
+    if args.engine:
+        from benchmarks.engine_bench import run_engine_bench
+        run_engine_bench(quick=args.quick)
+        return
 
     import benchmarks.paper_figures as F
 

@@ -28,12 +28,18 @@ import numpy as np
 NEG_INF = -3.0e38  # representable in fp32/bf16; used as the MAX identity
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Aggregate:
     """Vectorized user-defined aggregate (paper §2.2.3 API, batched).
 
     ``combine`` is either 'sum' (signed, supports negative edges) or 'max' /
     'min' (duplicate-insensitive, recompute-on-write in the engine).
+
+    Aggregates are static jit arguments in the engine; ``cache_key`` (set by
+    the built-in constructors to name + parameters) gives two equivalent
+    instances value equality so separately-built engines share compiled
+    programs. Custom aggregates leave it None -> identity semantics (safe,
+    no sharing).
     """
 
     name: str
@@ -43,6 +49,16 @@ class Aggregate:
     finalize: Callable[[jnp.ndarray], jnp.ndarray]      # (..., pao_dim) -> answer
     dup_insensitive: bool = False
     supports_subtraction: bool = False
+    cache_key: tuple | None = None
+
+    def __eq__(self, other):
+        if (self.cache_key is None or not isinstance(other, Aggregate)
+                or other.cache_key is None):
+            return self is other
+        return self.cache_key == other.cache_key
+
+    def __hash__(self):
+        return hash(self.cache_key) if self.cache_key is not None else id(self)
 
     # ------------------------------------------------------------- identities
     @property
@@ -102,6 +118,7 @@ class Aggregate:
 def sum_aggregate(value_dim: int = 1) -> Aggregate:
     return Aggregate(
         name="sum", pao_dim=value_dim, combine="sum",
+        cache_key=("sum", value_dim),
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         supports_subtraction=True,
@@ -110,7 +127,7 @@ def sum_aggregate(value_dim: int = 1) -> Aggregate:
 
 def count_aggregate() -> Aggregate:
     return Aggregate(
-        name="count", pao_dim=1, combine="sum",
+        name="count", pao_dim=1, combine="sum", cache_key=("count",),
         lift=lambda v: jnp.ones((v.shape[0], 1), dtype=jnp.float32),
         finalize=lambda p: p,
         supports_subtraction=True,
@@ -119,7 +136,7 @@ def count_aggregate() -> Aggregate:
 
 def avg_aggregate() -> Aggregate:
     return Aggregate(
-        name="avg", pao_dim=2, combine="sum",
+        name="avg", pao_dim=2, combine="sum", cache_key=("avg",),
         lift=lambda v: jnp.stack([v.reshape(-1).astype(jnp.float32),
                                   jnp.ones_like(v.reshape(-1), dtype=jnp.float32)], axis=-1),
         finalize=lambda p: p[..., 0] / jnp.maximum(p[..., 1], 1.0),
@@ -130,6 +147,7 @@ def avg_aggregate() -> Aggregate:
 def max_aggregate(value_dim: int = 1) -> Aggregate:
     return Aggregate(
         name="max", pao_dim=value_dim, combine="max",
+        cache_key=("max", value_dim),
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         dup_insensitive=True,
@@ -139,6 +157,7 @@ def max_aggregate(value_dim: int = 1) -> Aggregate:
 def min_aggregate(value_dim: int = 1) -> Aggregate:
     return Aggregate(
         name="min", pao_dim=value_dim, combine="min",
+        cache_key=("min", value_dim),
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         dup_insensitive=True,
@@ -159,7 +178,7 @@ def topk_aggregate(k: int = 3, domain: int = 64) -> Aggregate:
         return idx
 
     return Aggregate(
-        name="topk", pao_dim=domain, combine="sum",
+        name="topk", pao_dim=domain, combine="sum", cache_key=("topk", k, domain),
         lift=lift, finalize=finalize, supports_subtraction=True,
     )
 

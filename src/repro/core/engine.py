@@ -6,6 +6,22 @@ program over dense arrays. The overlay is compiled (host-side, once) into a
 leveled CSR ``ExecPlan``; at runtime the plan only reacts — no per-event
 reasoning, which is exactly the paper's design goal.
 
+Substrate layout. The plan is split into a hashable ``PlanMeta`` (static jit
+argument: shapes + backend) and a ``PlanArrays`` pytree of *runtime* device
+arrays — stacked, tile-padded per-level routing tables built through
+``segment_agg.ops.make_leveled_plan``. The jitted bodies ``lax.fori_loop``
+over the level axis, dynamically slicing one level's tables per iteration, so
+
+  * program op count is constant in overlay depth, and
+  * two overlays whose padded table shapes match (levels bucketed to 4,
+    edge blocks to powers of two) reuse one compiled program — an overlay
+    restructure (§3.3) is a table swap, not a retrace.
+
+Per-level reduce-by-key runs on a pluggable backend chosen at plan-compile
+time: ``pallas`` (the TPU segment_agg kernel; interpret mode off-TPU),
+``xla`` (segment_sum/segment_max fallback), or ``xla_unrolled`` (the legacy
+Python unroll over levels, kept as the benchmark baseline).
+
 Write path (combine='sum', invertible aggregates):
     window append -> per-writer PAO delta -> per-level
     ``delta[dst] += segment_sum(sign * delta[src])`` restricted to *push* dsts.
@@ -27,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -43,51 +60,151 @@ from repro.core.window import (
     init_windows,
     window_pao,
 )
+from repro.kernels.segment_agg.ops import (
+    E_BLK,
+    R_BLK,
+    make_leveled_plan,
+    segment_agg_level,
+)
+
+BACKENDS = ("pallas", "xla", "xla_unrolled")
 
 
-class _LevelEdges(NamedTuple):
-    src: np.ndarray
-    dst: np.ndarray
-    sign: np.ndarray
+def default_backend() -> str:
+    env = os.environ.get("EAGR_BACKEND", "").strip()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(f"EAGR_BACKEND={env!r}; choose from {BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+class LevelTables(NamedTuple):
+    """One edge set (push or pull) as stacked per-level kernel-layout tables.
+
+    All tables are (L, e_pad) / (L, n_blocks) with padding slots ``seg == -1``
+    (source 0, sign 0) so a padded slot contributes nothing on any backend.
+    ``touched`` marks, per level, the destination rows the level recomputes.
+    """
+
+    seg: jnp.ndarray            # (L, e_pad) int32 destination rows, -1 pad
+    src: jnp.ndarray            # (L, e_pad) int32 source rows, 0 pad
+    sign: jnp.ndarray           # (L, e_pad) f32 edge signs, 0 pad
+    tile_of_block: jnp.ndarray  # (L, n_blocks) int32
+    first_of_tile: jnp.ndarray  # (L, n_blocks) int32
+    touched: jnp.ndarray        # (L, n_nodes) bool
+
+
+class PlanArrays(NamedTuple):
+    """Runtime half of the plan: a pytree of device arrays (jit-traced, so
+    plans with equal shapes share one compiled program)."""
+
+    decision: jnp.ndarray       # (n_nodes,) int32 PUSH/PULL
+    writer_node: jnp.ndarray    # (n_writers,) int32; padding rows -> n_nodes
+    push: LevelTables
+    pull: LevelTables
+    demand_dst: jnp.ndarray     # (L, d_pad) int32 gather rows, pad -> n_nodes
+    demand_src: jnp.ndarray     # (L, d_pad) int32 scatter rows, pad -> n_nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMeta:
+    """Static half of the plan: the shape/backing information a jitted body
+    needs at trace time. Hashable; used as a static jit argument."""
+
+    n_nodes: int
+    n_writers: int
+    n_levels: int        # padded level-loop trip count
+    unroll_levels: int   # real depth iterated by 'xla_unrolled'; 0 for looped
+                         # backends so restructures with equal padded shapes
+                         # share one jit cache entry
+    n_row_tiles: int
+    backend: str
+    interpret: bool
 
 
 @dataclasses.dataclass
 class ExecPlan:
-    """Host-compiled execution plan: the overlay as leveled CSR arrays."""
+    """Host-compiled execution plan: the overlay as dense leveled-CSR tables.
 
-    n_nodes: int
-    n_levels: int
-    decision: np.ndarray              # (n,) PUSH/PULL
-    level: np.ndarray                 # (n,)
-    writer_node: np.ndarray           # (n_writers,) overlay node per window row
-    writer_row_of_base: dict[int, int]  # base id -> window row
+    No Python-level per-level edge lists — the per-level structure lives in
+    the stacked ``PlanArrays`` tables; only host-side id maps stay as dicts.
+    """
+
+    meta: PlanMeta
+    arrays: PlanArrays
+    depth: int                           # real overlay depth (levels)
+    decision: np.ndarray                 # (n,) PUSH/PULL (host copy)
+    level: np.ndarray                    # (n,)
+    writer_node: np.ndarray              # (n_writers,) overlay node per row
+    writer_row_of_base: dict[int, int]   # base id -> window row
     reader_node_of_base: dict[int, int]  # base id -> overlay node
-    push_edges: list[_LevelEdges]     # per level (1..L): edges into PUSH dsts
-    pull_edges: list[_LevelEdges]     # per level (1..L): edges into PULL dsts
-    demand_edges: list[_LevelEdges]   # per *dst* level: (dst->src), src PULL
     n_push_edges: int = 0
     n_pull_edges: int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return self.meta.n_nodes
+
+    @property
+    def n_levels(self) -> int:
+        return self.depth
 
     @property
     def n_writers(self) -> int:
         return len(self.writer_node)
 
 
-def compile_plan(overlay: Overlay, decisions: np.ndarray) -> ExecPlan:
-    level = overlay.levels()
+def _build_tables(per_level: list[list[tuple[int, int, int]]],
+                  pad_levels: int | None, pad_blocks: int | None,
+                  pad_nodes: int) -> LevelTables:
+    """Stack one edge set's per-level (src, dst, sign) triples into padded
+    kernel-layout tables via ``make_leveled_plan``."""
+    segs, srcs, signs = [], [], []
+    for tris in per_level:
+        arr = np.asarray(tris, dtype=np.int64).reshape(-1, 3)
+        segs.append(arr[:, 1])
+        srcs.append(arr[:, 0])
+        signs.append(arr[:, 2])
+    lp = make_leveled_plan(segs, pad_nodes, pad_levels=pad_levels,
+                           pad_blocks=pad_blocks)
+    L, E = lp.n_levels, lp.e_pad
+    src = np.zeros((L, E), np.int32)
+    sign = np.zeros((L, E), np.float32)
+    touched = np.zeros((L, pad_nodes), bool)
+    for l in range(len(segs)):
+        src[l] = lp.layout(l, srcs[l].astype(np.int32), fill=0)
+        sign[l] = lp.layout(l, signs[l].astype(np.float32), fill=0.0)
+        touched[l, segs[l]] = True
+    return LevelTables(
+        seg=jnp.asarray(lp.seg), src=jnp.asarray(src), sign=jnp.asarray(sign),
+        tile_of_block=jnp.asarray(lp.tile_of_block),
+        first_of_tile=jnp.asarray(lp.first_of_tile),
+        touched=jnp.asarray(touched),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPad:
+    """Explicit padding targets so several plans (e.g. sibling shards) share
+    one compiled program shape. Any field left at 0 keeps the natural size."""
+
+    n_nodes: int = 0
+    n_writers: int = 0
+    n_levels: int = 0
+    push_blocks: int = 0
+    pull_blocks: int = 0
+    demand_edges: int = 0
+
+
+def _collect_levels(overlay: Overlay, decision: np.ndarray, level: np.ndarray):
+    """Split overlay edges into per-level push/pull/demand triples."""
     n_levels = int(level.max()) if overlay.n_nodes else 0
-    decision = np.asarray(decisions, dtype=np.int64)
-
-    writers = overlay.writer_nodes()
-    writer_node = np.array(writers, dtype=np.int64)
-    writer_row_of_base = {overlay.origin[v]: i for i, v in enumerate(writers)}
-    reader_node_of_base = {overlay.origin[v]: v for v in overlay.reader_nodes()}
-
-    per_level_push: list[list[tuple[int, int, int]]] = [[] for _ in range(n_levels + 1)]
-    per_level_pull: list[list[tuple[int, int, int]]] = [[] for _ in range(n_levels + 1)]
-    per_level_demand: list[list[tuple[int, int]]] = [[] for _ in range(n_levels + 1)]
+    per_level_push: list[list[tuple[int, int, int]]] = [[] for _ in range(n_levels)]
+    per_level_pull: list[list[tuple[int, int, int]]] = [[] for _ in range(n_levels)]
+    per_level_demand: list[list[tuple[int, int]]] = [[] for _ in range(n_levels)]
     for dst in range(overlay.n_nodes):
-        l = int(level[dst])
+        l = int(level[dst]) - 1
         for src, sign in overlay.in_edges[dst]:
             if decision[dst] == PUSH:
                 per_level_push[l].append((src, dst, sign))
@@ -95,34 +212,120 @@ def compile_plan(overlay: Overlay, decisions: np.ndarray) -> ExecPlan:
                 per_level_pull[l].append((src, dst, sign))
                 if decision[src] == PULL:
                     per_level_demand[l].append((dst, src))
+    return per_level_push, per_level_pull, per_level_demand, n_levels
 
-    def pack(tris) -> _LevelEdges:
-        if not tris:
-            return _LevelEdges(np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.int64))
-        arr = np.asarray(sorted(tris, key=lambda t: t[1]), dtype=np.int64)
-        return _LevelEdges(arr[:, 0], arr[:, 1], arr[:, 2])
 
-    def pack2(pairs) -> _LevelEdges:
-        if not pairs:
-            return _LevelEdges(np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.int64))
-        arr = np.asarray(sorted(pairs, key=lambda t: t[1]), dtype=np.int64)
-        return _LevelEdges(arr[:, 0], arr[:, 1], np.ones(len(pairs), np.int64))
+def measure_plan(overlay: Overlay, decisions: np.ndarray) -> PlanPad:
+    """The padded table dimensions ``compile_plan`` would produce, computed
+    host-side without building or uploading any tables — equal to
+    ``plan_dims(compile_plan(overlay, decisions))``. Used to align several
+    plans (e.g. sibling shards) before compiling each exactly once."""
+    from repro.kernels.segment_agg.ops import leveled_plan_blocks
 
-    plan = ExecPlan(
+    decision = np.asarray(decisions, dtype=np.int64)
+    level = overlay.levels()
+    push, pull, demand, n_levels = _collect_levels(overlay, decision, level)
+
+    def bucket_blocks(per_level):
+        nb = leveled_plan_blocks(
+            [np.asarray(t, np.int64).reshape(-1, 3)[:, 1] for t in per_level])
+        return 1 << (nb - 1).bit_length()
+
+    d_real = max((len(p) for p in demand), default=0)
+    return PlanPad(
         n_nodes=overlay.n_nodes,
-        n_levels=n_levels,
+        n_writers=len(overlay.writer_nodes()),
+        n_levels=max(1, -(-n_levels // 4) * 4),
+        push_blocks=bucket_blocks(push),
+        pull_blocks=bucket_blocks(pull),
+        demand_edges=max(1, -(-d_real // 256) * 256),
+    )
+
+
+def compile_plan(overlay: Overlay, decisions: np.ndarray, *,
+                 backend: str | None = None,
+                 pad: PlanPad | None = None) -> ExecPlan:
+    backend = backend or default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    pad = pad or PlanPad()
+    level = overlay.levels()
+    decision = np.asarray(decisions, dtype=np.int64)
+    n_nodes = max(overlay.n_nodes, pad.n_nodes)
+
+    writers = overlay.writer_nodes()
+    writer_node = np.array(writers, dtype=np.int64)
+    writer_row_of_base = {overlay.origin[v]: i for i, v in enumerate(writers)}
+    reader_node_of_base = {overlay.origin[v]: v for v in overlay.reader_nodes()}
+
+    per_level_push, per_level_pull, per_level_demand, n_levels = \
+        _collect_levels(overlay, decision, level)
+
+    pad_levels = pad.n_levels or None
+    push = _build_tables(per_level_push, pad_levels,
+                         pad.push_blocks or None, n_nodes)
+    pull = _build_tables(per_level_pull, pad_levels,
+                         pad.pull_blocks or None, n_nodes)
+    L = push.seg.shape[0]
+
+    d_real = max((len(p) for p in per_level_demand), default=0)
+    d_pad = max(pad.demand_edges, max(1, -(-d_real // 256) * 256))
+    demand_dst = np.full((L, d_pad), n_nodes, np.int32)
+    demand_src = np.full((L, d_pad), n_nodes, np.int32)
+    for l, pairs in enumerate(per_level_demand):
+        if pairs:
+            arr = np.asarray(pairs, dtype=np.int64)
+            demand_dst[l, : len(pairs)] = arr[:, 0]
+            demand_src[l, : len(pairs)] = arr[:, 1]
+
+    n_writers = max(len(writer_node), pad.n_writers)
+    wnode = np.full(n_writers, n_nodes, np.int32)
+    wnode[: len(writer_node)] = writer_node
+
+    dec_pad = np.full(n_nodes, PULL, np.int64)
+    dec_pad[: overlay.n_nodes] = decision
+
+    meta = PlanMeta(
+        n_nodes=n_nodes,
+        n_writers=n_writers,
+        n_levels=L,
+        unroll_levels=n_levels if backend == "xla_unrolled" else 0,
+        n_row_tiles=max(1, -(-n_nodes // R_BLK)),
+        backend=backend,
+        interpret=(backend == "pallas" and jax.default_backend() != "tpu"),
+    )
+    arrays = PlanArrays(
+        decision=jnp.asarray(dec_pad, jnp.int32),
+        writer_node=jnp.asarray(wnode),
+        push=push,
+        pull=pull,
+        demand_dst=jnp.asarray(demand_dst),
+        demand_src=jnp.asarray(demand_src),
+    )
+    return ExecPlan(
+        meta=meta,
+        arrays=arrays,
+        depth=n_levels,
         decision=decision,
         level=level,
         writer_node=writer_node,
         writer_row_of_base=writer_row_of_base,
         reader_node_of_base=reader_node_of_base,
-        push_edges=[pack(per_level_push[l]) for l in range(1, n_levels + 1)],
-        pull_edges=[pack(per_level_pull[l]) for l in range(1, n_levels + 1)],
-        demand_edges=[pack2(per_level_demand[l]) for l in range(1, n_levels + 1)],
+        n_push_edges=sum(len(p) for p in per_level_push),
+        n_pull_edges=sum(len(p) for p in per_level_pull),
     )
-    plan.n_push_edges = sum(e.src.size for e in plan.push_edges)
-    plan.n_pull_edges = sum(e.src.size for e in plan.pull_edges)
-    return plan
+
+
+def plan_dims(plan: ExecPlan) -> PlanPad:
+    """The plan's padded table dimensions, as alignment targets."""
+    return PlanPad(
+        n_nodes=plan.meta.n_nodes,
+        n_writers=plan.meta.n_writers,
+        n_levels=plan.meta.n_levels,
+        push_blocks=plan.arrays.push.seg.shape[1] // E_BLK,
+        pull_blocks=plan.arrays.pull.seg.shape[1] // E_BLK,
+        demand_edges=plan.arrays.demand_dst.shape[1],
+    )
 
 
 class EngineState(NamedTuple):
@@ -131,72 +334,110 @@ class EngineState(NamedTuple):
     now: jnp.ndarray      # scalar fp32 logical clock
 
 
+# ------------------------------------------------------------ level execution
+def _level_reduce(meta: PlanMeta, tables: LevelTables, l, val: jnp.ndarray,
+                  op: str) -> jnp.ndarray:
+    """Reduce-by-destination of one level's edge contributions gathered from
+    ``val`` (n_nodes, F). ``l`` may be traced (fori_loop) or a Python int
+    (xla_unrolled). Rows outside the level's touched set are undefined —
+    callers mask. op: 'sum' (signed) | 'max' | 'min'."""
+    seg, src, sign = tables.seg[l], tables.src[l], tables.sign[l]
+    x = val[src]
+    if op == "sum":
+        x = x * sign[:, None]
+    if meta.backend == "pallas":
+        kern_op = "max" if op in ("max", "min") else "sum"
+        xk = -x if op == "min" else x
+        out = segment_agg_level(
+            xk, seg, tables.tile_of_block[l], tables.first_of_tile[l],
+            n_rows=meta.n_nodes, n_row_tiles=meta.n_row_tiles,
+            op=kern_op, interpret=meta.interpret)
+        return -out if op == "min" else out
+    dst = jnp.where(seg >= 0, seg, meta.n_nodes)
+    if op == "sum":
+        out = jax.ops.segment_sum(x, dst, num_segments=meta.n_nodes + 1)
+    elif op == "max":
+        out = jax.ops.segment_max(x, dst, num_segments=meta.n_nodes + 1)
+    else:
+        out = jax.ops.segment_min(x, dst, num_segments=meta.n_nodes + 1)
+    return out[: meta.n_nodes]
+
+
+def _level_loop(meta: PlanMeta, body, init):
+    """fori_loop over the padded level axis — or the legacy Python unroll over
+    real levels for the 'xla_unrolled' baseline backend."""
+    if meta.backend == "xla_unrolled":
+        for l in range(meta.unroll_levels):
+            init = body(l, init)
+        return init
+    return jax.lax.fori_loop(0, meta.n_levels, body, init)
+
+
 # ----------------------------------------------------------------- jit bodies
-def _write_body_sum(plan: ExecPlan, agg: Aggregate, spec: WindowSpec,
-                    state: EngineState, rows, vals, mask):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _write_body_sum(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                    arrays: PlanArrays, state: EngineState, rows, vals, mask):
     windows, evicted, evicted_valid = apply_writes(
-        state.windows, spec, rows, vals, jnp.full_like(vals, state.now), mask)
+        state.windows, spec, rows, vals,
+        jnp.full(rows.shape, state.now, jnp.float32), mask)
     delta_w = agg.lift(vals) * mask[:, None].astype(jnp.float32)
     delta_w -= agg.lift(evicted) * evicted_valid[:, None].astype(jnp.float32)
-    delta = jnp.zeros((plan.n_nodes, agg.pao_dim), dtype=jnp.float32)
-    wnode = jnp.asarray(plan.writer_node)
-    delta = delta.at[wnode[rows]].add(delta_w)
-    for e in plan.push_edges:  # static unroll over overlay levels
-        if e.src.size == 0:
-            continue
-        src, dst, sign = jnp.asarray(e.src), jnp.asarray(e.dst), jnp.asarray(e.sign)
-        contrib = jax.ops.segment_sum(
-            delta[src] * sign[:, None].astype(jnp.float32), dst,
-            num_segments=plan.n_nodes, indices_are_sorted=True)
-        delta = delta + contrib
+    delta = jnp.zeros((meta.n_nodes, agg.pao_dim), dtype=jnp.float32)
+    delta = delta.at[arrays.writer_node[rows]].add(delta_w, mode="drop")
+
+    def level(l, delta):
+        contrib = _level_reduce(meta, arrays.push, l, delta, "sum")
+        # untouched rows are undefined kernel output (uninitialized tiles) —
+        # only the level's destinations may accumulate
+        return delta + jnp.where(arrays.push.touched[l][:, None], contrib, 0.0)
+
+    delta = _level_loop(meta, level, delta)
     pao = state.pao + delta
     return EngineState(windows, pao, state.now + 1.0)
 
 
-def _write_body_extremal(plan: ExecPlan, agg: Aggregate, spec: WindowSpec,
-                         state: EngineState, rows, vals, mask):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _write_body_extremal(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                         arrays: PlanArrays, state: EngineState, rows, vals, mask):
     windows, _, _ = apply_writes(
-        state.windows, spec, rows, vals, jnp.full_like(vals, state.now), mask)
+        state.windows, spec, rows, vals,
+        jnp.full(rows.shape, state.now, jnp.float32), mask)
     # Recompute *all* writer PAOs from their windows (dense; written rows are
     # the only ones that changed, the rest recompute to their current value).
     wp = window_pao(windows, spec, agg, now=state.now)
-    pao = state.pao.at[jnp.asarray(plan.writer_node)].set(wp)
-    for e in plan.push_edges:
-        if e.src.size == 0:
-            continue
-        src, dst = jnp.asarray(e.src), jnp.asarray(e.dst)
-        new = agg.segment_merge(pao[src], dst, plan.n_nodes)
-        touched = jnp.zeros((plan.n_nodes, 1), jnp.float32).at[dst].set(1.0)
-        pao = jnp.where(touched > 0, new, pao)
+    pao = state.pao.at[arrays.writer_node].set(wp, mode="drop")
+
+    def level(l, pao):
+        new = _level_reduce(meta, arrays.push, l, pao, agg.combine)
+        return jnp.where(arrays.push.touched[l][:, None], new, pao)
+
+    pao = _level_loop(meta, level, pao)
     return EngineState(windows, pao, state.now + 1.0)
 
 
-def _read_body(plan: ExecPlan, agg: Aggregate, state: EngineState,
-               reader_nodes, mask):
-    decision = jnp.asarray(plan.decision)
-    demand = jnp.zeros((plan.n_nodes,), dtype=jnp.bool_)
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _read_body(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
+               state: EngineState, reader_nodes, mask):
+    decision = arrays.decision
+    demand = jnp.zeros((meta.n_nodes + 1,), dtype=jnp.bool_)
     is_pull_target = mask & (decision[reader_nodes] == PULL)
     demand = demand.at[reader_nodes].max(is_pull_target)
-    for e in reversed(plan.demand_edges):  # dst level descending
-        if e.src.size == 0:
-            continue
-        dst, src = jnp.asarray(e.src), jnp.asarray(e.dst)  # packed as (dst, src)
-        demand = demand.at[src].max(demand[dst])
+
+    def demand_level(i, demand):  # dst level descending
+        l = meta.n_levels - 1 - i if meta.backend != "xla_unrolled" \
+            else meta.unroll_levels - 1 - i
+        return demand.at[arrays.demand_src[l]].max(demand[arrays.demand_dst[l]])
+
+    demand = _level_loop(meta, demand_level, demand)
+    take = (demand[: meta.n_nodes] & (decision == PULL))[:, None]
     val = state.pao
-    for e in plan.pull_edges:  # level ascending
-        if e.src.size == 0:
-            continue
-        src, dst, sign = jnp.asarray(e.src), jnp.asarray(e.dst), jnp.asarray(e.sign)
-        if agg.combine == "sum":
-            computed = jax.ops.segment_sum(
-                val[src] * sign[:, None].astype(jnp.float32), dst,
-                num_segments=plan.n_nodes, indices_are_sorted=True)
-        else:
-            computed = agg.segment_merge(val[src], dst, plan.n_nodes)
-        take = demand[:, None] & (decision == PULL)[:, None]
+
+    def level(l, val):  # level ascending
+        computed = _level_reduce(meta, arrays.pull, l, val, agg.combine)
         # only overwrite rows that this level actually computed
-        touched = jnp.zeros((plan.n_nodes, 1), jnp.bool_).at[dst].set(True)
-        val = jnp.where(take & touched, computed, val)
+        return jnp.where(take & arrays.pull.touched[l][:, None], computed, val)
+
+    val = _level_loop(meta, level, val)
     answers = val[reader_nodes]
     return agg.finalize(answers), answers
 
@@ -206,7 +447,8 @@ class EagrEngine:
     """Runtime for one compiled ego-centric aggregate query."""
 
     def __init__(self, overlay: Overlay, decisions: np.ndarray, aggregate: Aggregate,
-                 window: WindowSpec | None = None):
+                 window: WindowSpec | None = None, *, backend: str | None = None,
+                 plan: ExecPlan | None = None):
         if aggregate.combine != "sum":
             neg = any(s < 0 for ins in overlay.in_edges for _, s in ins)
             if neg and not aggregate.supports_subtraction:
@@ -214,39 +456,62 @@ class EagrEngine:
         self.overlay = overlay
         self.agg = aggregate
         self.spec = window or WindowSpec(kind="tuple", size=1)
-        self.plan = compile_plan(overlay, decisions)
-        self._write = jax.jit(functools.partial(
-            _write_body_sum if aggregate.combine == "sum" else _write_body_extremal,
-            self.plan, self.agg, self.spec))
-        self._read = jax.jit(functools.partial(_read_body, self.plan, self.agg))
+        self.plan = plan or compile_plan(overlay, decisions, backend=backend)
+        body = (_write_body_sum if aggregate.combine == "sum"
+                else _write_body_extremal)
+        self._write = functools.partial(
+            body, self.plan.meta, self.agg, self.spec, self.plan.arrays)
+        self._read = functools.partial(
+            _read_body, self.plan.meta, self.agg, self.plan.arrays)
         self.state = self.init_state()
 
     def init_state(self) -> EngineState:
-        windows = init_windows(self.plan.n_writers, self.spec)
-        pao = self.agg.init_pao(self.plan.n_nodes)
+        windows = init_windows(self.plan.meta.n_writers, self.spec)
+        pao = self.agg.init_pao(self.plan.meta.n_nodes)
         return EngineState(windows, pao, jnp.float32(0.0))
 
     # ------------------------------------------------------------- execution
     def write_batch(self, base_ids: np.ndarray, values: np.ndarray,
                     batch_size: int | None = None) -> None:
-        """Apply a batch of writes (base node ids + raw values). Writes to
-        nodes that feed no reader (e.g. node g in the paper's Figure 1) are
-        dropped — nothing consumes them."""
+        """Apply a batch of writes (base node ids + raw values). Values are
+        (B,) scalars or (B, value_dim) vectors matching the window spec.
+        Writes to nodes that feed no reader (e.g. node g in the paper's
+        Figure 1) are dropped — nothing consumes them."""
+        base_ids = np.asarray(base_ids)
+        values = np.asarray(values, np.float32)
         keep = [i for i, b in enumerate(base_ids)
                 if int(b) in self.plan.writer_row_of_base]
-        base_ids = np.asarray(base_ids)[keep]
-        values = np.asarray(values)[keep]
+        if not keep and batch_size is None:
+            if self.agg.combine == "sum" or self.spec.kind == "tuple":
+                # every write was dropped; skip the jit call but still advance
+                # the logical clock, matching what the masked program does
+                # (sum adds a zero delta; tuple-window extremal recomputes an
+                # unchanged pao — neither depends on `now`)
+                self.state = self.state._replace(now=self.state.now + 1.0)
+                return
+            # extremal + time window: the masked program must still run — it
+            # refreshes writer PAOs at the new `now`, expiring old entries
+            batch_size = 1
+        base_ids = base_ids[keep]
+        values = values[keep]
         rows = np.array([self.plan.writer_row_of_base[int(b)] for b in base_ids], np.int32)
         B = batch_size or len(rows)
         pad = B - len(rows)
         mask = np.concatenate([np.ones(len(rows), bool), np.zeros(pad, bool)])
         rows = np.concatenate([rows, np.zeros(pad, np.int32)])
-        vals = np.concatenate([np.asarray(values, np.float32), np.zeros(pad, np.float32)])
+        vals = np.concatenate(
+            [values, np.zeros((pad,) + values.shape[1:], np.float32)])
         self.state = self._write(self.state, jnp.asarray(rows), jnp.asarray(vals),
                                  jnp.asarray(mask))
 
     def read_batch(self, base_ids: np.ndarray, batch_size: int | None = None):
         """Answer a batch of reads. Returns finalized answers (B, ...)."""
+        unknown = [int(b) for b in base_ids
+                   if int(b) not in self.plan.reader_node_of_base]
+        if unknown:
+            raise ValueError(
+                f"read_batch: base ids {sorted(set(unknown))[:8]} are not "
+                f"readers of this overlay (no reader node registered)")
         nodes = np.array([self.plan.reader_node_of_base[int(b)] for b in base_ids], np.int32)
         B = batch_size or len(nodes)
         pad = B - len(nodes)

@@ -36,6 +36,7 @@ class WindowSpec:
     kind: str = "tuple"      # 'tuple' | 'time'
     size: float = 1          # c for tuple windows, T for time windows
     capacity: int = 0        # ring capacity; defaults to c (tuple) / provided (time)
+    value_dim: int = 1       # raw values per write: scalar (1) or vector (>1)
 
     @property
     def cap(self) -> int:
@@ -46,10 +47,17 @@ class WindowSpec:
         raise ValueError("time windows need an explicit ring capacity")
 
 
+def _vshape(cond: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (B,)-shaped condition against values with trailing dims."""
+    return cond.reshape(cond.shape + (1,) * (like.ndim - cond.ndim))
+
+
 def init_windows(n_writers: int, spec: WindowSpec) -> WindowState:
     cap = spec.cap
+    vshape = (n_writers, cap) if spec.value_dim == 1 else (
+        n_writers, cap, spec.value_dim)
     return WindowState(
-        values=jnp.zeros((n_writers, cap), dtype=jnp.float32),
+        values=jnp.zeros(vshape, dtype=jnp.float32),
         stamps=jnp.full((n_writers, cap), -jnp.inf, dtype=jnp.float32),
         head=jnp.zeros((n_writers,), dtype=jnp.int32),
         count=jnp.zeros((n_writers,), dtype=jnp.int32),
@@ -141,9 +149,9 @@ def apply_writes(
     # in-batch predecessor (same row, rank - cap); index i - cap is in range
     prev_idx = jnp.maximum(jnp.arange(B) - cap, 0)
     batch_evict = v_s[prev_idx]
-    evicted_s = jnp.where(wrapped, batch_evict, ring_evict)
+    evicted_s = jnp.where(_vshape(wrapped, ring_evict), batch_evict, ring_evict)
     evicted_valid_s = m_s & (count_r + rank >= cap)
-    evicted_s = jnp.where(evicted_valid_s, evicted_s, 0.0)
+    evicted_s = jnp.where(_vshape(evicted_valid_s, evicted_s), evicted_s, 0.0)
     # back to original batch order
     inv = jnp.zeros(B, jnp.int32).at[order].set(jnp.arange(B, dtype=jnp.int32))
     evicted = evicted_s[inv]
@@ -155,7 +163,8 @@ def apply_writes(
     keep = m_s & (rank >= k_row[r_safe] - cap)      # last cap writes per row
     scatter_row = jnp.where(keep, r_safe, n_rows)   # sentinel row absorbs rest
     pad_vals = jnp.concatenate([state.values,
-                                jnp.zeros((1, cap), jnp.float32)])
+                                jnp.zeros((1,) + state.values.shape[1:],
+                                          jnp.float32)])
     pad_stms = jnp.concatenate([state.stamps,
                                 jnp.full((1, cap), -jnp.inf, jnp.float32)])
     new_vals = pad_vals.at[scatter_row, slot].set(v_s, mode="drop")[:n_rows]
@@ -182,8 +191,11 @@ def window_pao(state: WindowState, spec: WindowSpec, agg: Aggregate,
                now: jnp.ndarray | float = 0.0) -> jnp.ndarray:
     """Evaluate ``agg`` over every writer's current window -> (n_writers, pao_dim)."""
     m = live_mask(state, spec, now)
-    lifted = agg.lift(state.values.reshape(-1)).reshape(
-        state.values.shape[0], state.values.shape[1], agg.pao_dim)
+    n, cap = state.values.shape[:2]
+    raw = state.values.reshape(n * cap, -1)
+    if raw.shape[1] == 1:
+        raw = raw[:, 0]  # scalar aggregates keep their (B,) lift contract
+    lifted = agg.lift(raw).reshape(n, cap, agg.pao_dim)
     neutral = jnp.full_like(lifted, agg.identity)
     lifted = jnp.where(m[:, :, None], lifted, neutral)
     if agg.combine == "sum":

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.aggregates import Aggregate
 from repro.core.dataflow import PULL, PUSH
-from repro.core.engine import ExecPlan, compile_plan
+from repro.core.engine import ExecPlan, PlanPad, compile_plan, measure_plan
 from repro.core.overlay import Overlay
 
 
@@ -59,8 +59,26 @@ class ShardedOverlay:
         return float(np.mean(list(c.values()))) if c else 0.0
 
 
+def align_shard_plans(shards: list[Overlay], decisions: list[np.ndarray],
+                      *, backend: str | None = None) -> list[ExecPlan]:
+    """Compile every shard's plan padded to the element-wise maximum of all
+    shard dimensions (nodes, writers, levels, edge blocks, demand slots).
+
+    Aligned plans share one ``PlanMeta`` and identical array shapes, so the
+    per-shard write/read bodies hit a single jitted program — the shard axis
+    can then be a stacked leading dimension under ``shard_map`` instead of
+    n_shards separately-compiled programs. Dims come from the host-side
+    ``measure_plan`` pass, so each plan's tables are built exactly once."""
+    dims = [measure_plan(s, d) for s, d in zip(shards, decisions)]
+    pad = PlanPad(**{f: max(getattr(d, f) for d in dims)
+                     for f in PlanPad.__dataclass_fields__})
+    return [compile_plan(s, d, backend=backend, pad=pad)
+            for s, d in zip(shards, decisions)]
+
+
 def partition_overlay(overlay: Overlay, decisions: np.ndarray,
-                      n_shards: int, seed: int = 0) -> ShardedOverlay:
+                      n_shards: int, seed: int = 0, *,
+                      backend: str | None = None) -> ShardedOverlay:
     """Hash-partition readers; carve each shard's backward closure."""
     rng = np.random.default_rng(seed)
     readers = overlay.reader_nodes()
@@ -107,9 +125,10 @@ def partition_overlay(overlay: Overlay, decisions: np.ndarray,
         # original decision for surviving nodes by matching origins where
         # possible, defaulting interior nodes to PUSH.
         shard_decs.append(_project_decisions(overlay, decisions, sub))
-        plan = compile_plan(sub, shard_decs[-1])
-        plans.append(plan)
-        writer_rows.append(plan.writer_row_of_base)
+    # One padded plan shape for all shards: execution shares a single
+    # compiled program over the unified substrate (paper §7 on one machine).
+    plans = align_shard_plans(shards, shard_decs, backend=backend)
+    writer_rows = [plan.writer_row_of_base for plan in plans]
     return ShardedOverlay(shards=shards, shard_decisions=shard_decs,
                           reader_shard=reader_shard, shard_plans=plans,
                           writer_rows=writer_rows)

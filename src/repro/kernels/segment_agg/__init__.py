@@ -1,4 +1,19 @@
-from repro.kernels.segment_agg.ops import SegmentPlan, make_plan, segment_agg
+from repro.kernels.segment_agg.ops import (
+    LeveledPlan,
+    SegmentPlan,
+    make_leveled_plan,
+    make_plan,
+    segment_agg,
+    segment_agg_level,
+)
 from repro.kernels.segment_agg.ref import segment_agg_ref
 
-__all__ = ["SegmentPlan", "make_plan", "segment_agg", "segment_agg_ref"]
+__all__ = [
+    "LeveledPlan",
+    "SegmentPlan",
+    "make_leveled_plan",
+    "make_plan",
+    "segment_agg",
+    "segment_agg_level",
+    "segment_agg_ref",
+]

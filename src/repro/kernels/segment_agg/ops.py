@@ -118,3 +118,120 @@ def segment_agg(x: jnp.ndarray, plan: SegmentPlan, *, op: str = "sum",
     if x.ndim == 1:
         x = x[:, None]
     return _run(plan, x, op, interpret)
+
+
+# --------------------------------------------------------------- leveled plans
+@dataclasses.dataclass(frozen=True, eq=False)
+class LeveledPlan:
+    """A stack of per-level ``SegmentPlan`` routings padded to one shape.
+
+    All levels share the same edge-slot capacity (``e_pad``) and block count,
+    so a jitted program can ``fori_loop`` over levels, dynamically slicing one
+    level's routing tables per iteration — the program size is independent of
+    the number of levels. Padding slots carry ``seg == -1`` (dropped by the
+    kernel); padding *blocks* are routed to the last real block's output tile
+    so the kernel's consecutive-revisit invariant still holds on hardware.
+    """
+
+    seg: np.ndarray             # (L, e_pad) int32, -1 padding
+    tile_of_block: np.ndarray   # (L, n_blocks) int32
+    first_of_tile: np.ndarray   # (L, n_blocks) int32
+    perms: tuple                # per level: original edge index -> padded slot
+    n_rows: int
+    n_row_tiles: int
+    n_levels: int
+    e_pad: int
+
+    def layout(self, level: int, values: np.ndarray, fill=0,
+               dtype=None) -> np.ndarray:
+        """Place a per-edge companion array (e.g. sources, signs) of one level
+        into that level's padded kernel slot order."""
+        values = np.asarray(values)
+        out = np.full((self.e_pad,) + values.shape[1:], fill,
+                      dtype=dtype or values.dtype)
+        out[self.perms[level]] = values
+        return out
+
+
+def count_blocks(seg: np.ndarray) -> int:
+    """Edge blocks ``make_plan`` would emit for one segment list: per-tile
+    edge counts rounded up to E_BLK blocks (>=1, the dummy block)."""
+    seg = np.asarray(seg, dtype=np.int64)
+    if seg.size == 0:
+        return 1
+    _, counts = np.unique(seg // R_BLK, return_counts=True)
+    return int(sum(-(-c // E_BLK) for c in counts))
+
+
+def leveled_plan_blocks(segs: list[np.ndarray]) -> int:
+    """The (pre-bucketing) per-level block count ``make_leveled_plan`` pads
+    to — without building any tables. Bucket with the same next-power-of-two
+    rule to predict the final shape."""
+    return max((count_blocks(s) for s in segs), default=1)
+
+
+def make_leveled_plan(segs: list[np.ndarray], n_rows: int, *,
+                      pad_levels: int | None = None,
+                      pad_blocks: int | None = None) -> LeveledPlan:
+    """Route each level's destination segments through ``make_plan`` and stack
+    the results into one padded (L, e_pad) table set.
+
+    ``pad_levels`` / ``pad_blocks`` optionally force the padded level count and
+    per-level block count (must be >= the natural sizes) so plans for different
+    structures — restructured overlays, sibling shards — share one compiled
+    program shape. Defaults bucket levels to a multiple of 4 and blocks to the
+    next power of two for the same reason.
+    """
+    plans = [make_plan(np.asarray(s), n_rows) for s in segs]
+    nb_real = max((p.e_pad // E_BLK for p in plans), default=1)
+    nb = pad_blocks or max(1, 1 << (nb_real - 1).bit_length())
+    if nb < nb_real:
+        raise ValueError(f"pad_blocks={nb} < required {nb_real}")
+    L_real = len(plans)
+    L = pad_levels or max(1, -(-L_real // 4) * 4)
+    if L < L_real:
+        raise ValueError(f"pad_levels={L} < required {L_real}")
+    e_pad = nb * E_BLK
+
+    seg = np.full((L, e_pad), -1, dtype=np.int32)
+    tob = np.zeros((L, nb), dtype=np.int32)
+    fot = np.zeros((L, nb), dtype=np.int32)
+    perms = []
+    for l, p in enumerate(plans):
+        k = p.tile_of_block.size
+        seg[l, : p.e_pad] = p.seg_padded
+        tob[l, :k] = p.tile_of_block
+        tob[l, k:] = p.tile_of_block[-1] if k else 0  # keep revisits consecutive
+        fot[l, :k] = p.first_of_tile
+        perms.append(p.perm.copy())
+    for l in range(L_real, L):
+        fot[l, 0] = 1  # dummy level: init tile 0, aggregate nothing
+        perms.append(np.zeros(0, dtype=np.int64))
+    return LeveledPlan(
+        seg=seg, tile_of_block=tob, first_of_tile=fot, perms=tuple(perms),
+        n_rows=n_rows, n_row_tiles=max(1, -(-n_rows // R_BLK)),
+        n_levels=L, e_pad=e_pad,
+    )
+
+
+def segment_agg_level(x: jnp.ndarray, seg: jnp.ndarray, tob: jnp.ndarray,
+                      fot: jnp.ndarray, *, n_rows: int, n_row_tiles: int,
+                      op: str = "sum", interpret: bool = True) -> jnp.ndarray:
+    """Run the kernel on one level of a ``LeveledPlan``.
+
+    ``x`` is (e_pad, F) edge values already in the level's padded slot order
+    (use ``LeveledPlan.layout`` for static companions or gather through a
+    laid-out source-index array for runtime values). All arguments may be
+    traced — in particular slices of the stacked tables inside a loop over
+    levels. Returns (n_rows, F); rows the level never touches are whatever the
+    kernel initialized them to, so callers mask by their own touched set.
+    """
+    F = x.shape[1]
+    f_pad = -(-F // F_BLK) * F_BLK
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, f_pad - F)))
+    out = segment_agg_call(
+        xf, seg, tob, fot,
+        n_row_tiles=n_row_tiles, n_feat_tiles=f_pad // F_BLK,
+        op=op, interpret=interpret,
+    )
+    return out[:n_rows, :F]

@@ -48,9 +48,12 @@ def generate_trace(
     value_domain: int = 64,
     seed: int = 0,
     n_base: int | None = None,
+    value_dim: int = 1,
 ) -> Trace:
     """Zipfian trace over the given writer/reader id sets. Read frequency of a
-    node is linearly related to its write frequency (paper §5.1)."""
+    node is linearly related to its write frequency (paper §5.1).
+    ``value_dim > 1`` emits vector payloads (n_events, value_dim) — e.g.
+    topic-distribution writes for vector-PAO workloads."""
     rng = np.random.default_rng(seed)
     n_base = n_base or int(max(writers.max(initial=0), readers.max(initial=0))) + 1
 
@@ -72,7 +75,8 @@ def generate_trace(
     node[kind == WRITE] = rng.choice(writers, size=n_w, p=wf[writers] / wf[writers].sum())
     node[kind == READ] = rng.choice(readers, size=n_events - n_w,
                                     p=rf[readers] / rf[readers].sum())
-    value = rng.integers(0, value_domain, size=n_events).astype(np.float32)
+    vshape = (n_events,) if value_dim == 1 else (n_events, value_dim)
+    value = rng.integers(0, value_domain, size=vshape).astype(np.float32)
     scale = n_events / max(1.0, 1.0 + write_read_ratio)
     return Trace(kind=kind, node=node, value=value,
                  write_freq=wf * write_read_ratio * scale, read_freq=rf * scale)
@@ -93,10 +97,17 @@ def shift_workload(trace: Trace, boost_nodes: np.ndarray, factor: float = 10.0,
                  write_freq=trace.write_freq.copy(), read_freq=rf)
 
 
-def batched_playback(trace: Trace, batch: int) -> Iterator[tuple[str, np.ndarray, np.ndarray]]:
+def batched_playback(trace: Trace, batch: int, pad: bool = False) -> Iterator[tuple]:
     """Play the trace back as homogeneous batches: consecutive events of the
     same kind are grouped (up to ``batch``), matching the engine's batched
-    write/read entry points while preserving global order across kinds."""
+    write/read entry points while preserving global order across kinds.
+
+    With ``pad=True`` every yielded batch has exactly ``batch`` rows and an
+    extra ``n_live`` count: (kind, ids, vals, n_live). Padding rows repeat the
+    run's last event id (so padded ids stay valid for their kind) with zeroed
+    values; consumers must mask or slice by ``n_live`` — e.g. slice before
+    ``write_batch``, or ignore answer rows past ``n_live`` after a read.
+    Fixed shapes mean downstream batch routers never see ragged tails."""
     i = 0
     n = trace.n_events
     while i < n:
@@ -106,5 +117,13 @@ def batched_playback(trace: Trace, batch: int) -> Iterator[tuple[str, np.ndarray
             j += 1
         ids = trace.node[i:j]
         vals = trace.value[i:j]
-        yield ("write" if k == WRITE else "read", ids, vals)
+        if pad:
+            n_live = j - i
+            ids = np.concatenate(
+                [ids, np.full(batch - n_live, ids[-1], ids.dtype)])
+            vals = np.concatenate(
+                [vals, np.zeros((batch - n_live,) + vals.shape[1:], vals.dtype)])
+            yield ("write" if k == WRITE else "read", ids, vals, n_live)
+        else:
+            yield ("write" if k == WRITE else "read", ids, vals)
         i = j

@@ -1,0 +1,336 @@
+"""The unified execution substrate: kernel-backed plan parity and shape
+invariants.
+
+Three executors must agree with the window-level oracle and each other:
+``pallas`` (segment_agg kernel, interpret mode on CPU), ``xla`` (the
+segment_sum/segment_max fallback), and ``xla_unrolled`` (the legacy Python
+unroll kept as the benchmark baseline). On top of parity, the jitted
+write/read program op count must be *constant in overlay depth* for the
+looped backends, and sibling shard plans must align to one program shape.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_freqs
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.engine import (
+    EagrEngine,
+    _write_body_sum,
+    compile_plan,
+    plan_dims,
+)
+from repro.core.overlay import Overlay
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.kernels.segment_agg.ops import make_leveled_plan, segment_agg_level
+from repro.streams.traces import batched_playback, generate_trace
+
+BACKENDS = ("xla", "xla_unrolled", "pallas")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = rmat_graph(150, 900, seed=11)
+    bp = build_bipartite(g)
+    wf, rf = make_freqs(g.n_nodes, seed=11)
+    return bp, wf, rf
+
+
+def _drive(eng, bp, *, seed=3, topics=False, vdim=1):
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        ids = rng.choice(bp.writers, 48)
+        if topics:
+            vals = rng.integers(0, 16, 48).astype(np.float32)
+        elif vdim > 1:
+            vals = rng.normal(size=(48, vdim)).astype(np.float32)
+        else:
+            vals = rng.normal(size=48).astype(np.float32)
+        eng.write_batch(ids, vals)
+    q = rng.choice(list(bp.reader_inputs.keys()), 16)
+    return q, np.asarray(eng.read_batch(q))
+
+
+@pytest.mark.parametrize("aggname,variant", [
+    ("sum", "vnm_n"),    # negative overlay edges
+    ("max", "vnm_d"),    # duplicate-insensitive multipaths
+    ("min", "vnm_d"),
+    ("avg", "vnm_a"),    # pao_dim=2
+    ("topk", "vnm_a"),   # vector PAO (domain=16) exercises F lane tiling
+])
+def test_backend_parity_vs_oracle(setup, aggname, variant):
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant=variant, max_iterations=3, seed=0)
+    ov.validate(bp.reader_input_sets())
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for(aggname))
+    agg = (make_aggregate(aggname, k=3, domain=16) if aggname == "topk"
+           else make_aggregate(aggname))
+    ris = bp.reader_input_sets()
+    outs = {}
+    for backend in BACKENDS:
+        eng = EagrEngine(ov, dec, agg, WindowSpec("tuple", 4), backend=backend)
+        assert eng.plan.meta.backend == backend
+        q, outs[backend] = _drive(eng, bp, topics=(aggname == "topk"))
+        if aggname != "topk":  # topk finalize returns ids; compare backends only
+            for i, b in enumerate(q):
+                want = eng.oracle_read(int(b), ris)
+                np.testing.assert_allclose(
+                    np.ravel(outs[backend][i]), np.ravel(want),
+                    rtol=1e-4, atol=1e-4)
+    for backend in BACKENDS[1:]:
+        np.testing.assert_allclose(outs[backend], outs[BACKENDS[0]],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_vector_payload_parity(setup):
+    """(B, F) raw write values flow through windows, kernel, and oracle."""
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_n", max_iterations=3, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    agg = make_aggregate("sum", value_dim=3)
+    ris = bp.reader_input_sets()
+    outs = {}
+    for backend in BACKENDS:
+        eng = EagrEngine(ov, dec, agg, WindowSpec("tuple", 4, value_dim=3),
+                         backend=backend)
+        q, outs[backend] = _drive(eng, bp, vdim=3)
+        for i, b in enumerate(q):
+            want = eng.oracle_read(int(b), ris)
+            np.testing.assert_allclose(np.ravel(outs[backend][i]),
+                                       np.ravel(want), rtol=1e-4, atol=1e-4)
+    for backend in BACKENDS[1:]:
+        np.testing.assert_allclose(outs[backend], outs[BACKENDS[0]],
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ API guard rails
+def test_write_batch_empty_after_filtering(setup):
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    eng = EagrEngine(ov, dec, make_aggregate("sum"), WindowSpec("tuple", 2))
+    non_writer = max(int(b) for b in bp.writers) + 1000
+    before = np.asarray(eng.state.pao).copy()
+    eng.write_batch(np.array([non_writer]), np.array([5.0], np.float32))
+    eng.write_batch(np.array([], np.int64), np.array([], np.float32))
+    np.testing.assert_array_equal(np.asarray(eng.state.pao), before)
+    # with an explicit batch size the (masked) program still runs fine
+    eng.write_batch(np.array([non_writer]), np.array([5.0], np.float32),
+                    batch_size=4)
+    np.testing.assert_array_equal(np.asarray(eng.state.pao), before)
+
+
+def test_empty_batch_still_expires_time_windows(setup):
+    """An all-dropped batch must behave like the masked program: for an
+    extremal aggregate over a *time* window the PAO refresh still runs, so
+    entries expire; replay with and without batch_size stays equivalent."""
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_d", max_iterations=2, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("max"))
+    non_writer = max(int(b) for b in bp.writers) + 1000
+    w = int(bp.writers[0])
+    reader = next(r for r, ins in bp.reader_input_sets().items() if w in ins)
+    answers = {}
+    for label, bs in (("auto", None), ("fixed", 8)):
+        eng = EagrEngine(ov, dec, make_aggregate("max"),
+                         WindowSpec("time", size=2.0, capacity=4))
+        eng.write_batch(np.array([w]), np.array([7.0], np.float32),
+                        batch_size=bs)
+        for _ in range(4):  # all-dropped batches advance time past the window
+            eng.write_batch(np.array([non_writer]), np.array([1.0], np.float32),
+                            batch_size=bs)
+        answers[label] = float(np.ravel(eng.read_batch(np.array([reader])))[0])
+    assert answers["auto"] == answers["fixed"]
+    assert answers["auto"] <= -1e38  # the write at t=0 expired from [now-2]
+
+
+def test_measure_plan_matches_compiled_dims(setup):
+    from repro.core.engine import measure_plan
+    bp, wf, rf = setup
+    for variant in ("vnm_a", "vnm_n"):
+        ov, _ = construct_vnm(bp, variant=variant, max_iterations=2, seed=0)
+        dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+        assert measure_plan(ov, dec) == plan_dims(compile_plan(ov, dec))
+    ov, dec = _chain_overlay(7)
+    assert measure_plan(ov, dec) == plan_dims(compile_plan(ov, dec))
+
+
+def test_read_batch_unknown_reader_raises(setup):
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    eng = EagrEngine(ov, dec, make_aggregate("sum"), WindowSpec("tuple", 2))
+    bogus = max(bp.reader_inputs) + 999
+    with pytest.raises(ValueError, match="not.*readers"):
+        eng.read_batch(np.array([bogus]))
+
+
+def test_unknown_backend_rejected(setup):
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    with pytest.raises(ValueError, match="backend"):
+        compile_plan(ov, dec, backend="cuda")
+
+
+# -------------------------------------------------- program-size invariants
+def _chain_overlay(depth: int, n_writers: int = 4) -> tuple[Overlay, np.ndarray]:
+    """writers -> I -> I -> ... (depth I nodes) -> reader, all PUSH."""
+    ov = Overlay(kinds=[], origin=[], in_edges=[])
+    ws = [ov.add_node("W", i) for i in range(n_writers)]
+    prev = ov.add_node("I")
+    for w in ws:
+        ov.add_edge(w, prev)
+    for _ in range(depth - 1):
+        nxt = ov.add_node("I")
+        ov.add_edge(prev, nxt)
+        prev = nxt
+    r = ov.add_node("R", n_writers)
+    ov.add_edge(prev, r)
+    dec = np.full(ov.n_nodes, D.PUSH)
+    return ov, dec
+
+
+def _write_eqn_count(plan, agg, spec, batch=8) -> int:
+    """Trace the (unjitted) write body and count jaxpr equations."""
+    fn = functools.partial(_write_body_sum.__wrapped__, plan.meta, agg, spec)
+    from repro.core.engine import EngineState
+    from repro.core.window import init_windows
+    state = EngineState(init_windows(plan.meta.n_writers, spec),
+                        agg.init_pao(plan.meta.n_nodes), jnp.float32(0.0))
+    jaxpr = jax.make_jaxpr(fn)(
+        plan.arrays, state, jnp.zeros(batch, jnp.int32),
+        jnp.zeros(batch, jnp.float32), jnp.ones(batch, bool))
+    return len(jaxpr.jaxpr.eqns)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_op_count_constant_in_depth(backend):
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 2)
+    counts = []
+    for depth in (2, 7, 15):
+        ov, dec = _chain_overlay(depth)
+        plan = compile_plan(ov, dec, backend=backend)
+        counts.append(_write_eqn_count(plan, agg, spec))
+    assert counts[0] == counts[1] == counts[2], counts
+
+
+def test_op_count_grows_when_unrolled():
+    """The legacy baseline retains depth-proportional program size — the
+    regression the substrate refactor removes."""
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 2)
+    counts = []
+    for depth in (2, 15):
+        ov, dec = _chain_overlay(depth)
+        plan = compile_plan(ov, dec, backend="xla_unrolled")
+        counts.append(_write_eqn_count(plan, agg, spec))
+    assert counts[1] > counts[0], counts
+
+
+def _restructured_overlay() -> tuple[Overlay, np.ndarray]:
+    """Same nodes/writers as _chain_overlay(5, 4) but rewired: two partial
+    aggregates merging, then a shorter chain — a §3.3-style restructure."""
+    ov = Overlay(kinds=[], origin=[], in_edges=[])
+    ws = [ov.add_node("W", i) for i in range(4)]
+    i1, i2 = ov.add_node("I"), ov.add_node("I")
+    ov.add_edge(ws[0], i1), ov.add_edge(ws[1], i1)
+    ov.add_edge(ws[2], i2), ov.add_edge(ws[3], i2)
+    i3 = ov.add_node("I")
+    ov.add_edge(i1, i3), ov.add_edge(i2, i3)
+    i4 = ov.add_node("I")
+    ov.add_edge(i3, i4)
+    i5 = ov.add_node("I")
+    ov.add_edge(i4, i5)
+    r = ov.add_node("R", 4)
+    ov.add_edge(i5, r)
+    return ov, np.full(ov.n_nodes, D.PUSH)
+
+
+def test_restructured_overlay_same_program_shape(setup):
+    """Overlay restructure (§3.3) with unchanged padded dims -> identical
+    PlanMeta and array shapes -> jit cache hit instead of a retrace."""
+    p1 = compile_plan(*_chain_overlay(5, n_writers=4), backend="xla")
+    p2 = compile_plan(*_restructured_overlay(), backend="xla")
+    assert p1.meta == p2.meta
+    s1 = jax.tree.map(lambda a: a.shape, p1.arrays)
+    s2 = jax.tree.map(lambda a: a.shape, p2.arrays)
+    assert jax.tree.all(jax.tree.map(lambda a, b: a == b, s1, s2))
+
+
+def test_restructured_overlay_hits_jit_cache():
+    """The end-to-end guarantee: separately-built engines (fresh Aggregate
+    instances included) over restructured overlays run ONE compiled write
+    program, not two."""
+    ov1, dec1 = _chain_overlay(5, n_writers=4)
+    ov2, dec2 = _restructured_overlay()
+    spec = WindowSpec("tuple", 2)
+    assert make_aggregate("sum") == make_aggregate("sum")
+    assert make_aggregate("topk", k=3) != make_aggregate("topk", k=5)
+    e1 = EagrEngine(ov1, dec1, make_aggregate("sum"), spec, backend="xla")
+    e2 = EagrEngine(ov2, dec2, make_aggregate("sum"), spec, backend="xla")
+    ids = np.arange(4)
+    vals = np.ones(4, np.float32)
+    e1.write_batch(ids, vals)
+    before = _write_body_sum._cache_size()
+    e2.write_batch(ids, vals)
+    assert _write_body_sum._cache_size() == before, "restructure retraced"
+
+
+def test_shard_plans_share_one_program_shape(setup):
+    from repro.distributed.eagr_shard import partition_overlay
+    bp, wf, rf = setup
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    sharded = partition_overlay(ov, dec, n_shards=3, seed=1)
+    metas = {p.meta for p in sharded.shard_plans}
+    assert len(metas) == 1, "aligned shard plans must share one PlanMeta"
+    shapes = [jax.tree.map(lambda a: a.shape, p.arrays)
+              for p in sharded.shard_plans]
+    assert all(s == shapes[0] for s in shapes[1:])
+
+
+# --------------------------------------------------------- leveled kernel plan
+def test_leveled_plan_matches_ref():
+    from repro.kernels.segment_agg.ref import segment_agg_ref
+    rng = np.random.default_rng(0)
+    n_rows, F = 300, 5
+    segs = [rng.integers(0, n_rows, e) for e in (40, 7, 0, 513)]
+    lp = make_leveled_plan(segs, n_rows)
+    assert lp.n_levels % 4 == 0 and lp.n_levels >= len(segs)
+    for l, seg in enumerate(segs):
+        x = rng.normal(size=(len(seg), F)).astype(np.float32)
+        xp = lp.layout(l, x, fill=0.0)
+        out = segment_agg_level(
+            jnp.asarray(xp), jnp.asarray(lp.seg[l]),
+            jnp.asarray(lp.tile_of_block[l]), jnp.asarray(lp.first_of_tile[l]),
+            n_rows=n_rows, n_row_tiles=lp.n_row_tiles, op="sum")
+        ref = segment_agg_ref(jnp.asarray(x), jnp.asarray(seg), n_rows, op="sum") \
+            if len(seg) else jnp.zeros((n_rows, F))
+        touched = np.zeros(n_rows, bool)
+        touched[seg] = True
+        np.testing.assert_allclose(np.asarray(out)[touched],
+                                   np.asarray(ref)[touched], rtol=1e-5, atol=1e-5)
+
+
+def test_padded_playback_fixed_shapes(setup):
+    bp, _, _ = setup
+    readers = np.array(list(bp.reader_inputs))
+    trace = generate_trace(bp.writers, readers, 500, seed=2)
+    shapes = set()
+    n_total = 0
+    for kind, ids, vals, n_live in batched_playback(trace, 64, pad=True):
+        assert ids.shape == (64,) and vals.shape[0] == 64
+        assert 0 < n_live <= 64
+        shapes.add((ids.shape, vals.shape))
+        n_total += n_live
+    assert len(shapes) == 1
+    assert n_total == trace.n_events
