@@ -1,0 +1,158 @@
+"""Structural-churn benchmark -> BENCH_dynamic.json.
+
+Measures §3.3 incremental plan maintenance against the full-rebuild path it
+replaces: per churn burst, the wall-clock of ``EagrEngine.apply_delta``
+(journaled delta -> in-place PlanArrays patch -> PAO refresh) versus a fresh
+``compile_plan`` over the same overlay — at churn ratios touching 0.1%, 1%,
+and 10% of the readers per burst. Also reports structural updates/s through
+the patch path and how many bursts fell back to a recompile.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --dynamic [--quick] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import EagrEngine, compile_plan
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dynamic.json")
+
+RATIOS = (0.001, 0.01, 0.1)
+
+
+def _churn_ops(dyn: DynamicOverlay, rng, readers, n_base: int, n_ops: int):
+    """One burst: a mix of edge adds (70%) and deletes (30%)."""
+    for _ in range(n_ops):
+        r = int(rng.choice(readers))
+        if rng.random() < 0.7 or not dyn.reader_inputs.get(r):
+            dyn.add_edge(int(rng.integers(0, n_base)), r)
+        else:
+            dyn.delete_edge(int(next(iter(dyn.reader_inputs[r]))), r)
+
+
+def run_dynamic_bench(quick: bool = False, out_path: str = OUT_PATH,
+                      check: bool = False) -> dict:
+    graph = dict(n_nodes=2_000, n_edges=12_000) if quick else \
+        dict(n_nodes=6_000, n_edges=36_000)
+    bursts = 8 if quick else 15
+    g = rmat_graph(seed=0, **graph)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    ris = bp.reader_input_sets()
+    dyn = DynamicOverlay.from_overlay(ov, ris)
+    ov0 = dyn.to_overlay(prune=False)
+    rng = np.random.default_rng(1)
+    wf = rng.zipf(1.6, graph["n_nodes"]).clip(1, 1000).astype(np.float64)
+    rf = wf[rng.permutation(graph["n_nodes"])]
+    dec, _ = D.decide_mincut(ov0, wf, rf, D.cost_model_for("sum"))
+
+    eng = EagrEngine(ov0, dec, make_aggregate("sum"), WindowSpec("tuple", 8),
+                     headroom=2.0)
+    readers = np.array(list(ris))
+    writers = bp.writers
+
+    def write():
+        ids = rng.choice(writers, 256)
+        vals = rng.normal(size=256).astype(np.float32)
+        eng.write_batch(ids, vals, batch_size=256)
+
+    # warm: compile the write/read/refresh programs once
+    write()
+    eng.read_batch(rng.choice(readers, 256), batch_size=256)
+    dyn.add_edge(int(writers[0]), int(readers[0]))
+    eng.apply_delta(dyn.drain_delta())
+    write()
+
+    # Full-rebuild baseline: what every structural update costs without the
+    # patch path. Two components, reported separately:
+    #   * compile: to_overlay + compile_plan table build (repeatable median)
+    #   * retrace: the first write+read through the freshly shaped plan —
+    #     natural padding drifts under churn, so the pre-patch flow pays this
+    #     jit recompile whenever any padded dim moves (the common case).
+    compile_s = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ov_now = dyn.to_overlay(prune=False)
+        plan2 = compile_plan(ov_now, eng.plan.decision,
+                             backend=eng.plan.meta.backend)
+        compile_s.append(time.perf_counter() - t0)
+    compile_median = statistics.median(compile_s)
+    eng2 = EagrEngine(ov_now, eng.plan.decision, make_aggregate("sum"),
+                      WindowSpec("tuple", 8), plan=plan2)
+    t0 = time.perf_counter()
+    eng2.write_batch(rng.choice(writers, 256),
+                     rng.normal(size=256).astype(np.float32), batch_size=256)
+    eng2.read_batch(rng.choice(readers, 256), batch_size=256)
+    jax.block_until_ready(eng2.state.pao)
+    retrace_s = time.perf_counter() - t0
+    del eng2
+    rebuild_median = compile_median + retrace_s
+
+    report = {
+        "bench": "dynamic_churn",
+        "device": jax.default_backend(),
+        "graph": graph,
+        "n_readers": int(len(readers)),
+        "bursts_per_ratio": bursts,
+        "rebuild_compile_s_median": round(compile_median, 4),
+        "rebuild_retrace_s": round(retrace_s, 4),
+        "rebuild_total_s": round(rebuild_median, 4),
+        "ratios": {},
+    }
+    for ratio in RATIOS:
+        n_ops = max(1, int(len(readers) * ratio))
+        patch_s, recompiles = [], 0
+        for _ in range(bursts):
+            _churn_ops(dyn, rng, readers, graph["n_nodes"], n_ops)
+            delta = dyn.drain_delta()
+            t0 = time.perf_counter()
+            res = eng.apply_delta(delta)
+            jax.block_until_ready(eng.state.pao)
+            patch_s.append(time.perf_counter() - t0)
+            recompiles += bool(res.recompiled)
+            write()
+        med = statistics.median(patch_s)
+        row = {
+            "ops_per_burst": n_ops,
+            "patch_s_median": round(med, 5),
+            "patch_s_p90": round(sorted(patch_s)[int(0.9 * len(patch_s))], 5),
+            "updates_per_s": round(n_ops / med) if med else None,
+            "recompile_fallbacks": recompiles,
+            "speedup_patch_vs_rebuild": round(rebuild_median / med, 2)
+            if med else None,
+        }
+        report["ratios"][str(ratio)] = row
+        print(f"dynamic/churn={ratio:.3%}: {row}", flush=True)
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+
+    if check:
+        floor = 3.0 if quick else 10.0
+        worst = min(r["speedup_patch_vs_rebuild"]
+                    for r in report["ratios"].values())
+        if worst < floor:
+            raise SystemExit(
+                f"patch-path regression: min speedup {worst:.1f}x < {floor}x")
+        print(f"check passed: min patch speedup {worst:.1f}x >= {floor}x")
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    run_dynamic_bench(quick="--quick" in sys.argv, check="--check" in sys.argv)

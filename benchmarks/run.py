@@ -19,11 +19,21 @@ def main(argv=None) -> None:
     p.add_argument("--engine", action="store_true",
                    help="run the old-vs-new substrate benchmark and emit "
                         "BENCH_engine.json (skips the paper figures)")
+    p.add_argument("--dynamic", action="store_true",
+                   help="run the structural-churn benchmark (patch vs "
+                        "recompile, §3.3) and emit BENCH_dynamic.json")
+    p.add_argument("--check", action="store_true",
+                   help="with --dynamic: exit nonzero if the patch path "
+                        "regresses below the speedup floor")
     args = p.parse_args(argv)
 
     if args.engine:
         from benchmarks.engine_bench import run_engine_bench
         run_engine_bench(quick=args.quick)
+        return
+    if args.dynamic:
+        from benchmarks.dynamic_bench import run_dynamic_bench
+        run_dynamic_bench(quick=args.quick, check=args.check)
         return
 
     import benchmarks.paper_figures as F

@@ -19,10 +19,78 @@ negative edge; deletions never touch negative edges (they reference non-members)
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import NamedTuple
+
 import numpy as np
 
 from repro.core.iob import IOBBuilder
 from repro.core.overlay import Overlay
+
+
+class NodePatch(NamedTuple):
+    """Post-mutation snapshot of one overlay node, as the patcher consumes it."""
+
+    kind: str                           # effective kind ('W'|'I'|'R'; emptied
+                                        # readers already demoted to 'I')
+    origin: int
+    edges: tuple[tuple[int, int], ...]  # current in-edges (src overlay node, sign)
+
+
+@dataclasses.dataclass
+class OverlayDelta:
+    """Structured mutation log of one churn burst (paper §3.3).
+
+    ``nodes`` snapshots every node whose in-edge list (or kind) changed,
+    including all newly created nodes — enough for ``plan_patch`` to diff
+    against the live plan's host mirror and patch the level tables in place.
+    Per-level edge adds/removes are *derived* there (levels are a global
+    property of the DAG, not something the mutation site can know).
+    """
+
+    nodes: dict[int, NodePatch]
+    n_nodes_before: int
+    n_nodes_after: int
+    new_writer_nodes: list[int]         # ALL W-kind nodes created this epoch,
+                                        # id order — every one claims a window
+                                        # row so patched and recompiled plans
+                                        # agree on row positions (W-kind nodes
+                                        # own rows in id order on both paths,
+                                        # even if deleted within the epoch)
+    new_writers: dict[int, int]         # base id -> new overlay writer node
+    new_readers: dict[int, int]         # base id -> new overlay reader node
+    retired_writers: set[int]           # base ids whose writer role ended
+    retired_readers: set[int]           # base ids whose reader role ended
+    touched_readers: set[int]           # base reader ids affected (shard routing)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.nodes or self.retired_writers or self.retired_readers)
+
+    def merge(self, later: "OverlayDelta") -> "OverlayDelta":
+        """Coalesce two consecutive deltas (later snapshots win; a later
+        retirement cancels an earlier addition and vice versa)."""
+        nodes = dict(self.nodes)
+        nodes.update(later.nodes)
+        new_writers = {**self.new_writers, **later.new_writers}
+        new_readers = {**self.new_readers, **later.new_readers}
+        for b in later.retired_writers - set(later.new_writers):
+            new_writers.pop(b, None)
+        for b in later.retired_readers - set(later.new_readers):
+            new_readers.pop(b, None)
+        return OverlayDelta(
+            nodes=nodes,
+            n_nodes_before=self.n_nodes_before,
+            n_nodes_after=later.n_nodes_after,
+            new_writer_nodes=self.new_writer_nodes + later.new_writer_nodes,
+            new_writers=new_writers,
+            new_readers=new_readers,
+            retired_writers=(self.retired_writers - set(later.new_writers))
+            | later.retired_writers,
+            retired_readers=(self.retired_readers - set(later.new_readers))
+            | later.retired_readers,
+            touched_readers=self.touched_readers | later.touched_readers,
+        )
 
 
 class DynamicOverlay:
@@ -37,6 +105,13 @@ class DynamicOverlay:
         self.split_limit = split_limit
         self.direct_writer_count: dict[int, int] = {}
         self.dup_insensitive = False
+        # ------------------------------------------------------ mutation log
+        self._dirty: set[int] = set()           # nodes whose inputs changed
+        builder.journal = self._dirty
+        self._delta_base = len(builder.kinds)   # first node id of this burst
+        self._retired_writers: set[int] = set()
+        self._retired_readers: set[int] = set()
+        self._touched_readers: set[int] = set()
 
     # ------------------------------------------------------------ adoption
     @staticmethod
@@ -92,6 +167,8 @@ class DynamicOverlay:
         if not delta:
             return
         rid = self._ensure_reader(r)
+        self._dirty.add(rid)
+        self._touched_readers.add(r)
         self.reader_inputs[r] |= delta
         # members/rev for the reader reflect its I-set
         self.b.members[rid] |= delta
@@ -127,6 +204,7 @@ class DynamicOverlay:
             return
         keep = [d for d in self.b.inputs[rid] if self.b.kinds[d] != "W"]
         self.b.inputs[rid] = keep
+        self._dirty.add(rid)
         self.b.cover_reader(rid, {self.b.origin[d] for d in direct})
 
     def add_edge(self, u: int, v: int, affected: dict[int, set[int]] | None = None) -> None:
@@ -152,6 +230,8 @@ class DynamicOverlay:
         if not delta:
             return
         rid = self.reader_node[r]
+        self._dirty.add(rid)
+        self._touched_readers.add(r)
         self.reader_inputs[r] -= delta
         self.b.members[rid] -= delta
         for w in delta:
@@ -198,29 +278,95 @@ class DynamicOverlay:
         b = self.b
         wid = b.writer_node.pop(u, None)
         if wid is not None:
+            self._retired_writers.add(u)
             consumers = [n for n in range(len(b.kinds)) if wid in b.inputs[n]]
             for n in consumers:
                 b.inputs[n] = [d for d in b.inputs[n] if d != wid]
+                self._dirty.add(n)
             # u leaves every I-set and every reader's tracked input set
             for n in b.rev.get(u, set()).copy():
                 b.members[n].discard(u)
                 if b.kinds[n] == "R":
                     self.reader_inputs.get(b.origin[n], set()).discard(u)
+                    self._touched_readers.add(b.origin[n])
+                    self._dirty.add(n)  # may demote to 'I' if now empty
             b.rev.pop(u, None)
-            for negs in self.neg_edges.values():
+            for rid_neg, negs in self.neg_edges.items():
                 while wid in negs:
                     negs.remove(wid)
+                    self._dirty.add(rid_neg)
         rid = self.reader_node.pop(u, None)
         if rid is not None:
+            self._retired_readers.add(u)
+            self._touched_readers.add(u)
             b.inputs[rid] = []
+            self._dirty.add(rid)
             self.neg_edges.pop(rid, None)
             self.reader_inputs.pop(u, None)
             for w in list(b.members[rid]):
                 b.rev.get(w, set()).discard(rid)
             b.members[rid] = set()
 
+    # ------------------------------------------------------------ delta log
+    def _effective_kind(self, nid: int) -> str:
+        """Node kind as exported: emptied/superseded readers demote to 'I'."""
+        kind = self.b.kinds[nid]
+        if kind == "R" and (
+            self.reader_node.get(self.b.origin[nid]) != nid
+            or not self.reader_inputs.get(self.b.origin[nid])
+        ):
+            return "I"
+        return kind
+
+    def _node_edges(self, nid: int) -> tuple[tuple[int, int], ...]:
+        edges = [(s, 1) for s in self.b.inputs[nid]]
+        edges += [(wn, -1) for wn in self.neg_edges.get(nid, [])]
+        return tuple(edges)
+
+    def drain_delta(self) -> OverlayDelta:
+        """Return the structured mutation log since the last drain (or since
+        construction) and reset it. Feed the result to
+        ``EagrEngine.apply_delta`` / ``plan_patch.patch_plan`` to patch a live
+        plan instead of recompiling; ``to_overlay()`` remains the
+        full-rebuild path."""
+        b = self.b
+        dirty = set(self._dirty) | set(range(self._delta_base, len(b.kinds)))
+        nodes = {nid: NodePatch(self._effective_kind(nid), b.origin[nid],
+                                self._node_edges(nid))
+                 for nid in sorted(dirty)}
+        new_writers = {b.origin[nid]: nid
+                       for nid in range(self._delta_base, len(b.kinds))
+                       if b.kinds[nid] == "W"
+                       and b.writer_node.get(b.origin[nid]) == nid}
+        new_readers = {b.origin[nid]: nid
+                       for nid in range(self._delta_base, len(b.kinds))
+                       if b.kinds[nid] == "R"
+                       and self.reader_node.get(b.origin[nid]) == nid}
+        delta = OverlayDelta(
+            nodes=nodes,
+            n_nodes_before=self._delta_base,
+            n_nodes_after=len(b.kinds),
+            new_writer_nodes=[nid for nid in range(self._delta_base, len(b.kinds))
+                              if b.kinds[nid] == "W"],
+            new_writers=new_writers,
+            new_readers=new_readers,
+            retired_writers=set(self._retired_writers),
+            retired_readers=set(self._retired_readers),
+            touched_readers=set(self._touched_readers),
+        )
+        self._dirty.clear()
+        self._delta_base = len(b.kinds)
+        self._retired_writers.clear()
+        self._retired_readers.clear()
+        self._touched_readers.clear()
+        return delta
+
     # ------------------------------------------------------------ export
-    def to_overlay(self) -> Overlay:
+    def to_overlay(self, prune: bool = True) -> Overlay:
+        """Full-rebuild export. ``prune=False`` keeps builder node ids stable
+        (dead nodes linger edgeless) — the id space the patch path lives in,
+        so a plan compiled from the unpruned export can later be patched by
+        ``drain_delta`` deltas."""
         ov = Overlay(kinds=list(self.b.kinds), origin=list(self.b.origin),
                      in_edges=[[(s, 1) for s in ins] for ins in self.b.inputs],
                      dup_insensitive=self.dup_insensitive)
@@ -235,4 +381,4 @@ class DynamicOverlay:
                 or not self.reader_inputs.get(ov.origin[v])
             ):
                 ov.kinds[v] = "I"
-        return ov.pruned()
+        return ov.pruned() if prune else ov

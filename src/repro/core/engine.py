@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 import os
 from typing import NamedTuple
 
@@ -58,6 +59,9 @@ from repro.core.window import (
     WindowState,
     apply_writes,
     init_windows,
+    pad_window_rows,
+    reset_window_rows,
+    stale_rows,
     window_pao,
 )
 from repro.kernels.segment_agg.ops import (
@@ -141,6 +145,9 @@ class ExecPlan:
     reader_node_of_base: dict[int, int]  # base id -> overlay node
     n_push_edges: int = 0
     n_pull_edges: int = 0
+    host: object | None = None           # plan_patch.PlanHost mirror (lazy);
+                                         # owned by the incremental patch path
+    patches_applied: int = 0
 
     @property
     def n_nodes(self) -> int:
@@ -328,6 +335,27 @@ def plan_dims(plan: ExecPlan) -> PlanPad:
     )
 
 
+def grow_pad(pad: PlanPad, growth: float = 2.0) -> PlanPad:
+    """Scale padding targets by ``growth`` so a plan compiled now has slot /
+    node / level headroom for structural churn (§3.3): in-capacity updates
+    then patch the tables in place instead of recompiling."""
+    g = max(1.0, float(growth))
+
+    def up(x, mult):
+        x = max(1, int(np.ceil(x * g)))
+        return -(-x // mult) * mult
+
+    blocks = lambda x: 1 << (max(1, int(np.ceil(x * g))) - 1).bit_length()
+    return PlanPad(
+        n_nodes=up(pad.n_nodes, R_BLK),
+        n_writers=up(pad.n_writers, 8),
+        n_levels=up(pad.n_levels, 4),
+        push_blocks=blocks(pad.push_blocks),
+        pull_blocks=blocks(pad.pull_blocks),
+        demand_edges=up(pad.demand_edges, 256),
+    )
+
+
 class EngineState(NamedTuple):
     windows: WindowState
     pao: jnp.ndarray      # (n_nodes, pao_dim)
@@ -398,21 +426,64 @@ def _write_body_sum(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
 def _write_body_extremal(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
-                         arrays: PlanArrays, state: EngineState, rows, vals, mask):
+                         arrays: PlanArrays, state: EngineState, rows, vals,
+                         mask, prev_now):
+    """Non-invertible write path, restricted to the *touched* writer set: the
+    rows written this batch plus (time windows) the rows with an entry that
+    expired since ``prev_now`` — the last instant writer PAOs were evaluated.
+    Untouched rows keep their stored PAO (identical to recomputing them), and
+    the level sweep only overwrites destinations downstream of a touched
+    writer, so the recompute is confined to the changed closure instead of
+    every writer and every push node per batch."""
     windows, _, _ = apply_writes(
         state.windows, spec, rows, vals,
         jnp.full(rows.shape, state.now, jnp.float32), mask)
-    # Recompute *all* writer PAOs from their windows (dense; written rows are
-    # the only ones that changed, the rest recompute to their current value).
     wp = window_pao(windows, spec, agg, now=state.now)
-    pao = state.pao.at[arrays.writer_node].set(wp, mode="drop")
+    written = jnp.zeros((meta.n_writers,), bool).at[rows].max(mask, mode="drop")
+    if spec.kind == "time":
+        touched_w = written | stale_rows(state.windows, spec, prev_now, state.now)
+    else:
+        touched_w = written  # tuple windows only evict on write
+    old_w = state.pao[jnp.minimum(arrays.writer_node, meta.n_nodes - 1)]
+    new_w = jnp.where(touched_w[:, None], wp, old_w)
+    pao = state.pao.at[arrays.writer_node].set(new_w, mode="drop")
+    changed = jnp.zeros((meta.n_nodes + 1,), bool)
+    changed = changed.at[arrays.writer_node].max(touched_w, mode="promise_in_bounds")
+
+    def level(l, carry):
+        pao, changed = carry
+        new = _level_reduce(meta, arrays.push, l, pao, agg.combine)
+        seg = arrays.push.seg[l]
+        dst = jnp.where(seg >= 0, seg, meta.n_nodes)
+        ch = jax.ops.segment_max(
+            changed[arrays.push.src[l]].astype(jnp.int32), dst,
+            num_segments=meta.n_nodes + 1) > 0
+        upd = arrays.push.touched[l] & ch[: meta.n_nodes]
+        pao = jnp.where(upd[:, None], new, pao)
+        changed = changed.at[: meta.n_nodes].max(upd)
+        return pao, changed
+
+    pao, _ = _level_loop(meta, level, (pao, changed))
+    return EngineState(windows, pao, state.now + 1.0)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _refresh_pao(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                 arrays: PlanArrays, windows, now) -> jnp.ndarray:
+    """Recompute the full PAO array from the writer windows through the push
+    tables — the state repair after a structural patch (``apply_delta``):
+    rewired push nodes get exact values, retired rows fall back to the
+    aggregate identity, pull rows are left for the read-path demand sweep.
+    One cached program per plan shape, so in-capacity churn never retraces."""
+    wp = window_pao(windows, spec, agg, now=now)
+    pao = agg.init_pao(meta.n_nodes)
+    pao = pao.at[arrays.writer_node].set(wp[: meta.n_writers], mode="drop")
 
     def level(l, pao):
         new = _level_reduce(meta, arrays.push, l, pao, agg.combine)
         return jnp.where(arrays.push.touched[l][:, None], new, pao)
 
-    pao = _level_loop(meta, level, pao)
-    return EngineState(windows, pao, state.now + 1.0)
+    return _level_loop(meta, level, pao)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -448,7 +519,7 @@ class EagrEngine:
 
     def __init__(self, overlay: Overlay, decisions: np.ndarray, aggregate: Aggregate,
                  window: WindowSpec | None = None, *, backend: str | None = None,
-                 plan: ExecPlan | None = None):
+                 plan: ExecPlan | None = None, headroom: float | None = None):
         if aggregate.combine != "sum":
             neg = any(s < 0 for ins in overlay.in_edges for _, s in ins)
             if neg and not aggregate.supports_subtraction:
@@ -456,14 +527,32 @@ class EagrEngine:
         self.overlay = overlay
         self.agg = aggregate
         self.spec = window or WindowSpec(kind="tuple", size=1)
-        self.plan = plan or compile_plan(overlay, decisions, backend=backend)
-        body = (_write_body_sum if aggregate.combine == "sum"
+        if plan is None:
+            pad = (grow_pad(measure_plan(overlay, decisions), headroom)
+                   if headroom and headroom > 1.0 else None)
+            plan = compile_plan(overlay, decisions, backend=backend, pad=pad)
+        self.plan = plan
+        self._rebind()
+        self.state = self.init_state()
+        # host-side logical clock mirror + extremal-path eviction bookkeeping:
+        # `_expiry` holds the eval times of batches whose entries are still
+        # inside the time window; an all-dropped batch only needs the device
+        # program when one of them crosses the expiry boundary.
+        self._now_host = 0.0
+        self._last_eval_now = 0.0
+        self._expiry: list[float] = []
+
+    def _rebind(self) -> None:
+        """(Re)bind the jitted bodies to the current plan arrays. Called at
+        init and after ``apply_delta`` swaps the table pytree; as long as the
+        plan's ``PlanMeta`` and array shapes are unchanged the bound bodies
+        hit the existing jit cache entries."""
+        body = (_write_body_sum if self.agg.combine == "sum"
                 else _write_body_extremal)
         self._write = functools.partial(
             body, self.plan.meta, self.agg, self.spec, self.plan.arrays)
         self._read = functools.partial(
             _read_body, self.plan.meta, self.agg, self.plan.arrays)
-        self.state = self.init_state()
 
     def init_state(self) -> EngineState:
         windows = init_windows(self.plan.meta.n_writers, self.spec)
@@ -488,9 +577,18 @@ class EagrEngine:
                 # (sum adds a zero delta; tuple-window extremal recomputes an
                 # unchanged pao — neither depends on `now`)
                 self.state = self.state._replace(now=self.state.now + 1.0)
+                self._now_host += 1.0
                 return
-            # extremal + time window: the masked program must still run — it
-            # refreshes writer PAOs at the new `now`, expiring old entries
+            if not (self._expiry
+                    and self._expiry[0] < self._now_host - self.spec.size):
+                # extremal + time window, but no live entry crosses the expiry
+                # boundary at this instant: the masked program would recompute
+                # an unchanged pao — skip it and just advance the clock
+                self.state = self.state._replace(now=self.state.now + 1.0)
+                self._now_host += 1.0
+                return
+            # an entry expires at this evaluation instant: the masked program
+            # must run — it refreshes the touched writer PAOs at the new `now`
             batch_size = 1
         base_ids = base_ids[keep]
         values = values[keep]
@@ -501,8 +599,62 @@ class EagrEngine:
         rows = np.concatenate([rows, np.zeros(pad, np.int32)])
         vals = np.concatenate(
             [values, np.zeros((pad,) + values.shape[1:], np.float32)])
-        self.state = self._write(self.state, jnp.asarray(rows), jnp.asarray(vals),
-                                 jnp.asarray(mask))
+        if self.agg.combine == "sum":
+            self.state = self._write(self.state, jnp.asarray(rows),
+                                     jnp.asarray(vals), jnp.asarray(mask))
+        else:
+            if self.spec.kind == "time":
+                if len(base_ids):
+                    heapq.heappush(self._expiry, self._now_host)
+                boundary = self._now_host - self.spec.size
+                while self._expiry and self._expiry[0] < boundary:
+                    heapq.heappop(self._expiry)  # reflected by this refresh
+            prev = self._last_eval_now
+            self._last_eval_now = self._now_host
+            self.state = self._write(self.state, jnp.asarray(rows),
+                                     jnp.asarray(vals), jnp.asarray(mask),
+                                     jnp.float32(prev))
+        self._now_host += 1.0
+
+    # -------------------------------------------------- structural updates
+    def apply_delta(self, delta, *, growth: float = 2.0):
+        """Apply a ``DynamicOverlay.drain_delta()`` mutation log to the live
+        plan (§3.3 end to end). In-capacity updates patch the level tables in
+        place and reuse every compiled program; a tile/level/capacity
+        overflow falls back to ``compile_plan`` with ``growth`` headroom so
+        the next churn burst patches cheaply. Engine state is migrated: new
+        writer rows are live immediately, retired writer windows are zeroed,
+        and all push PAOs are repaired by one (cached) refresh program.
+        Returns the ``plan_patch.PatchResult``."""
+        from repro.core.plan_patch import patch_plan
+
+        res = patch_plan(self.plan, delta, overlay=self.overlay, growth=growth)
+        if res.reason == "empty delta":
+            return res  # nothing changed: skip the state refresh entirely
+        self.plan = res.plan
+        if res.recompiled and res.overlay is not None:
+            self.overlay = res.overlay
+        windows = pad_window_rows(self.state.windows, self.plan.meta.n_writers)
+        if res.retired_writer_rows:
+            windows = reset_window_rows(windows, res.retired_writer_rows)
+        pao = _refresh_pao(self.plan.meta, self.agg, self.spec,
+                           self.plan.arrays, windows, self.state.now)
+        self.state = EngineState(windows, pao, self.state.now)
+        self._last_eval_now = self._now_host
+        self._rebind()
+        return res
+
+    def adopt_plan(self, plan: ExecPlan) -> None:
+        """Swap in a structurally-equivalent recompiled plan (e.g. a shard
+        realigned to a new shared program shape) and migrate engine state:
+        windows resize to the new writer capacity, PAOs are refreshed."""
+        self.plan = plan
+        windows = pad_window_rows(self.state.windows, plan.meta.n_writers)
+        pao = _refresh_pao(plan.meta, self.agg, self.spec, plan.arrays,
+                           windows, self.state.now)
+        self.state = EngineState(windows, pao, self.state.now)
+        self._last_eval_now = self._now_host
+        self._rebind()
 
     def read_batch(self, base_ids: np.ndarray, batch_size: int | None = None):
         """Answer a batch of reads. Returns finalized answers (B, ...)."""

@@ -38,6 +38,10 @@ class IOBBuilder:
         self.members: list[set[int]] = []    # I(ovl): base writers aggregated
         self.rev: dict[int, set[int]] = {}   # reverse index
         self.writer_node: dict[int, int] = {}
+        # Optional mutation journal: when set (by DynamicOverlay), every node
+        # whose input list changes is recorded so structural churn can be
+        # turned into an OverlayDelta instead of a full rebuild (§3.3).
+        self.journal: set[int] | None = None
 
     # ---------------------------------------------------------------- nodes
     def add_node(self, kind: str, origin: int, members: set[int]) -> int:
@@ -48,6 +52,8 @@ class IOBBuilder:
         self.members.append(members)
         for w in members:
             self.rev.setdefault(w, set()).add(nid)
+        if self.journal is not None:
+            self.journal.add(nid)
         return nid
 
     def add_writer(self, w: int) -> int:
@@ -59,6 +65,8 @@ class IOBBuilder:
 
     def set_inputs(self, node: int, new_inputs: list[int]) -> None:
         self.inputs[node] = list(new_inputs)
+        if self.journal is not None:
+            self.journal.add(node)
 
     # ---------------------------------------------------------------- cover
     def _best_candidate(self, A: set[int], exclude: set[int]) -> int | None:

@@ -1,0 +1,582 @@
+"""Incremental ExecPlan maintenance: patch ``PlanArrays`` in place (§3.3).
+
+The full-rebuild path (``compile_plan``) re-derives every stacked level table
+and usually retraces the jitted bodies — seconds of latency per structural
+update. This module consumes the structured mutation log a ``DynamicOverlay``
+journals (``OverlayDelta``) and patches the *live* plan instead, in three
+escalating tiers:
+
+  1. **slot patch** — a retired edge's slot is neutralized in place
+     (``seg=-1, src=0, sign=0``: the padding pattern every backend drops);
+     a new edge claims a free slot inside the owning row tile's block range.
+     Host mirrors mutate slot-wise; the device copy syncs as one whole-table
+     upload (see ``_sync_table`` for why that beats eager scatters here —
+     ``ops.patch_level`` remains the in-place primitive for jit-resident
+     table updates). Milliseconds, zero shape changes.
+  2. **level relayout** — when a tile has no free slot (or a destination
+     moved into a previously-empty tile) the whole level row is rebuilt from
+     the host mirror (`ops.relayout_level`) — still inside the plan's padded
+     block budget, so shapes and therefore the jit cache are untouched.
+  3. **recompile fallback** — a genuine capacity overflow (nodes, writers,
+     levels, blocks, demand slots) falls back to ``compile_plan`` with a
+     ``growth``-factor ``PlanPad`` so the *next* churn burst patches cheaply.
+
+Node ids are kept stable by operating on the **unpruned** overlay export
+(``DynamicOverlay.to_overlay(prune=False)``): dead nodes linger edgeless and
+writer rows are append-only, which is what makes window state migration a
+pad-and-zero instead of a reshuffle.
+
+The patcher owns a host mirror of the plan (``PlanHost``): the overlay graph
+(in-edges, kinds, decisions, levels), numpy copies of every level table, and
+per-(level, tile) free-slot pools derived from the kernel's block routing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import PULL, PUSH
+from repro.core.dynamic import OverlayDelta
+from repro.core.engine import (
+    ExecPlan,
+    LevelTables,
+    PlanArrays,
+    compile_plan,
+    grow_pad,
+    measure_plan,
+)
+from repro.core.overlay import Overlay
+from repro.kernels.segment_agg.ops import (
+    E_BLK,
+    R_BLK,
+    relayout_level,
+    tile_slot_ranges,
+)
+
+
+class CapacityExceeded(Exception):
+    """An in-place patch does not fit the plan's padded capacity."""
+
+
+# --------------------------------------------------------------- host mirrors
+@dataclasses.dataclass
+class TableHost:
+    """Numpy mirror of one ``LevelTables`` plus slot bookkeeping."""
+
+    seg: np.ndarray               # (L, e_pad) int32
+    src: np.ndarray               # (L, e_pad) int32
+    sign: np.ndarray              # (L, e_pad) f32
+    tob: np.ndarray               # (L, n_blocks) int32
+    fot: np.ndarray               # (L, n_blocks) int32
+    touched: np.ndarray           # (L, cap) bool
+    tile_slots: np.ndarray        # (L, n_row_tiles, 2) [start, stop) per tile
+    slots_of: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    level_of: dict[int, int] = dataclasses.field(default_factory=dict)
+    free: dict[tuple[int, int], list[int]] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_tables(t: LevelTables, n_row_tiles: int) -> "TableHost":
+        seg = np.array(t.seg)
+        L = seg.shape[0]
+        tob = np.array(t.tile_of_block)
+        th = TableHost(
+            seg=seg, src=np.array(t.src), sign=np.array(t.sign),
+            tob=tob, fot=np.array(t.first_of_tile), touched=np.array(t.touched),
+            tile_slots=np.stack([tile_slot_ranges(tob[l], n_row_tiles)
+                                 for l in range(L)]),
+        )
+        for l in range(L):
+            th.index_level(l)
+        return th
+
+    def index_level(self, l: int) -> None:
+        """Rebuild slot occupancy and the free pools of one level row."""
+        for d in [d for d, lv in self.level_of.items() if lv == l]:
+            self.slots_of.pop(d, None)
+            self.level_of.pop(d, None)
+        row = self.seg[l]
+        occ_mask = row >= 0
+        occupied = np.flatnonzero(occ_mask)
+        # group occupied slots by destination (vectorized: sort-then-split)
+        dsts = row[occupied]
+        order = np.argsort(dsts, kind="stable")
+        sorted_dsts = dsts[order]
+        sorted_slots = occupied[order]
+        uniq, starts = np.unique(sorted_dsts, return_index=True)
+        bounds = np.append(starts, len(sorted_dsts))
+        for i, d in enumerate(uniq):
+            d = int(d)
+            self.slots_of[d] = sorted_slots[bounds[i]: bounds[i + 1]].tolist()
+            self.level_of[d] = l
+        free_mask = ~occ_mask
+        for t in range(self.tile_slots.shape[1]):
+            a, b = int(self.tile_slots[l, t, 0]), int(self.tile_slots[l, t, 1])
+            self.free[(l, t)] = [] if a == b else \
+                (np.flatnonzero(free_mask[a:b])[::-1] + a).tolist()
+
+    def n_edges(self) -> int:
+        return sum(len(s) for s in self.slots_of.values())
+
+
+@dataclasses.dataclass
+class PlanHost:
+    """Host-side authoritative mirror of a live plan: the (unpruned) overlay
+    graph plus numpy copies of every routing table."""
+
+    kinds: list[str]
+    origin: list[int]
+    in_edges: list[list[tuple[int, int]]]
+    out: list[list[int]]          # src -> consumer nodes (multiset as list)
+    decision: np.ndarray          # (>=n_real,) int64
+    level: np.ndarray             # (>=n_real,) int64
+    push: TableHost
+    pull: TableHost
+    demand: list[list[tuple[int, int]]]   # per padded level: (dst, src) pairs
+    n_real: int
+    dup_insensitive: bool = False
+    retired_writer_bases: set[int] = dataclasses.field(default_factory=set)
+
+    @staticmethod
+    def from_plan(plan: ExecPlan, overlay: Overlay) -> "PlanHost":
+        if overlay.n_nodes != len(plan.level):
+            raise ValueError(
+                f"overlay has {overlay.n_nodes} nodes but the plan was "
+                f"compiled over {len(plan.level)} — pass the (unpruned) "
+                f"overlay the plan was compiled from")
+        meta = plan.meta
+        cap = meta.n_nodes
+        in_edges = [list(e) for e in overlay.in_edges]
+        out: list[list[int]] = [[] for _ in range(cap)]
+        for dst, ins in enumerate(in_edges):
+            for s, _ in ins:
+                out[s].append(dst)
+        level = np.zeros(cap, np.int64)
+        level[: overlay.n_nodes] = plan.level
+        dd = np.array(plan.arrays.demand_dst)
+        ds = np.array(plan.arrays.demand_src)
+        demand = [[(int(a), int(b)) for a, b in zip(dd[l], ds[l]) if a < cap]
+                  for l in range(dd.shape[0])]
+        kinds = list(overlay.kinds) + ["I"] * (cap - overlay.n_nodes)
+        origin = list(overlay.origin) + [-1] * (cap - overlay.n_nodes)
+        in_edges += [[] for _ in range(cap - overlay.n_nodes)]
+        return PlanHost(
+            kinds=kinds, origin=origin, in_edges=in_edges, out=out,
+            decision=np.array(plan.arrays.decision, dtype=np.int64),
+            level=level,
+            push=TableHost.from_tables(plan.arrays.push, meta.n_row_tiles),
+            pull=TableHost.from_tables(plan.arrays.pull, meta.n_row_tiles),
+            demand=demand, n_real=overlay.n_nodes,
+            dup_insensitive=overlay.dup_insensitive,
+        )
+
+    def export_overlay(self) -> Overlay:
+        return Overlay(kinds=list(self.kinds[: self.n_real]),
+                       origin=list(self.origin[: self.n_real]),
+                       in_edges=[list(e) for e in self.in_edges[: self.n_real]],
+                       dup_insensitive=self.dup_insensitive)
+
+
+# ------------------------------------------------------------------- results
+@dataclasses.dataclass
+class PatchResult:
+    plan: ExecPlan
+    recompiled: bool
+    reason: str | None
+    overlay: Overlay | None                  # fresh export iff recompiled
+    retired_writer_rows: list[int]
+    stats: dict
+
+
+# ------------------------------------------------------------ graph updating
+def _relax_levels(host: PlanHost, seeds: set[int]) -> set[int]:
+    """Longest-path level relaxation from the nodes whose in-edges changed.
+    Returns every node whose level moved (their edges must re-home)."""
+    changed: set[int] = set()
+    q = deque(sorted(seeds))
+    inq = set(q)
+    while q:
+        v = q.popleft()
+        inq.discard(v)
+        nl = max((int(host.level[s]) + 1 for s, _ in host.in_edges[v]),
+                 default=0)
+        if nl != int(host.level[v]):
+            host.level[v] = nl
+            changed.add(v)
+            for c in host.out[v]:
+                if c not in inq:
+                    q.append(c)
+                    inq.add(c)
+    return changed
+
+
+def _update_decisions(host: PlanHost, delta: OverlayDelta) -> set[int]:
+    """Default decisions for new nodes (writers PUSH; interiors PUSH iff all
+    inputs are PUSH; readers PULL), then enforce the dataflow invariant —
+    no PULL upstream of a PUSH — by flipping violators PULL and cascading
+    downstream. Returns every node whose decision changed."""
+    changed: set[int] = set()
+    for nid in range(delta.n_nodes_before, delta.n_nodes_after):
+        k = host.kinds[nid]
+        if k == "W":
+            d = PUSH
+        elif k == "R":
+            d = PULL
+        else:
+            ins = host.in_edges[nid]
+            d = PUSH if ins and all(host.decision[s] == PUSH for s, _ in ins) \
+                else PULL
+        if int(host.decision[nid]) != d:
+            host.decision[nid] = d
+            changed.add(nid)
+    q = deque(sorted(set(delta.nodes) | changed,
+                     key=lambda v: int(host.level[v])))
+    while q:
+        v = q.popleft()
+        if host.decision[v] == PUSH and any(
+                host.decision[s] == PULL for s, _ in host.in_edges[v]):
+            host.decision[v] = PULL
+            changed.add(v)
+            q.extend(host.out[v])
+    return changed
+
+
+# ------------------------------------------------------------- table patching
+def _table_of(host: PlanHost, d: int) -> str | None:
+    if not host.in_edges[d]:
+        return None
+    return "push" if host.decision[d] == PUSH else "pull"
+
+
+def _slot_tile(th: TableHost, l: int, slot: int) -> int:
+    return int(th.tob[l, slot // E_BLK])
+
+
+def _free_slots(th: TableHost, d: int, pend: dict, stats: dict) -> None:
+    slots = th.slots_of.pop(d, None)
+    if slots is None:
+        return
+    l = th.level_of.pop(d)
+    for s in slots:
+        th.seg[l, s] = -1
+        th.src[l, s] = 0
+        th.sign[l, s] = 0.0
+        th.free[(l, _slot_tile(th, l, s))].append(s)
+        pend.setdefault(l, set()).add(s)
+    stats["edges_removed"] += len(slots)
+
+
+def _claim_slots(th: TableHost, d: int, edges, l: int, pend: dict,
+                 rebuild: set, stats: dict) -> None:
+    """Place ``edges`` (src, sign) of destination ``d`` into free slots of its
+    owning tile at level ``l``; escalate the level to a relayout when the
+    tile's pool runs dry."""
+    if l in rebuild:
+        return  # the level row is being rebuilt from the graph mirror anyway
+    pool = th.free.get((l, d // R_BLK), [])
+    if len(pool) < len(edges):
+        rebuild.add(l)
+        return
+    for s_, sg in edges:
+        slot = pool.pop()
+        th.seg[l, slot] = d
+        th.src[l, slot] = s_
+        th.sign[l, slot] = sg
+        th.slots_of.setdefault(d, []).append(slot)
+        th.level_of[d] = l
+        pend.setdefault(l, set()).add(slot)
+    stats["edges_added"] += len(edges)
+
+
+def _diff_in_place(th: TableHost, d: int, new_edges, l: int, pend: dict,
+                   rebuild: set, stats: dict) -> None:
+    """Destination stays in the same table and level: free only the removed
+    edges' slots and claim slots only for the added ones."""
+    slots = th.slots_of.get(d, [])
+    need = Counter((int(s), float(g)) for s, g in new_edges)
+    keep, freed = [], []
+    for s in slots:
+        e = (int(th.src[l, s]), float(th.sign[l, s]))
+        if need[e] > 0:
+            need[e] -= 1
+            keep.append(s)
+        else:
+            freed.append(s)
+    for s in freed:
+        th.seg[l, s] = -1
+        th.src[l, s] = 0
+        th.sign[l, s] = 0.0
+        th.free[(l, _slot_tile(th, l, s))].append(s)
+        pend.setdefault(l, set()).add(s)
+    stats["edges_removed"] += len(freed)
+    th.slots_of[d] = keep
+    if not keep:
+        th.slots_of.pop(d, None)
+        th.level_of.pop(d, None)
+    missing = [e for e, c in need.items() for _ in range(c)]
+    if missing:
+        _claim_slots(th, d, missing, l, pend, rebuild, stats)
+
+
+def _rebuild_level(host: PlanHost, th: TableHost, table: str, l: int,
+                   cap: int, n_row_tiles: int) -> None:
+    dsts = [int(d) for d in np.flatnonzero(host.level[: host.n_real] == l + 1)
+            if _table_of(host, d) == table]
+    dst_l, src_l, sign_l = [], [], []
+    for d in dsts:
+        for s, sg in host.in_edges[d]:
+            dst_l.append(d)
+            src_l.append(s)
+            sign_l.append(sg)
+    rl = relayout_level(np.asarray(dst_l, np.int64), np.asarray(src_l, np.int64),
+                        np.asarray(sign_l, np.float64), cap,
+                        th.tob.shape[1], th.seg.shape[1])
+    if rl is None:
+        raise CapacityExceeded(f"{table} level {l} exceeds the block budget")
+    th.seg[l], th.src[l], th.sign[l], th.tob[l], th.fot[l] = rl
+    th.tile_slots[l] = tile_slot_ranges(th.tob[l], n_row_tiles)
+    th.index_level(l)
+
+
+def _sync_table(t: LevelTables, th: TableHost, pend: dict, rebuilds: set,
+                cap: int) -> LevelTables:
+    """Push the host mirror's changed slots/rows to the device tables without
+    changing any padded dim (so jitted consumers keep their programs).
+
+    The mirrors are re-uploaded wholesale (a plain device transfer): an eager
+    ``.at[].set`` would copy the full table anyway *and* compile one scatter
+    executable per distinct slot-count — measured 45ms per new shape on CPU,
+    dwarfing the tables themselves. ``ops.patch_level`` remains the narrow
+    in-place primitive for jit-resident use (and the unit tests)."""
+    if not (pend or rebuilds):
+        return t
+    for l in sorted(set(pend) | rebuilds):
+        row = np.zeros(cap, bool)
+        segl = th.seg[l]
+        row[segl[segl >= 0]] = True
+        th.touched[l] = row
+    return LevelTables(seg=jnp.asarray(th.seg), src=jnp.asarray(th.src),
+                       sign=jnp.asarray(th.sign),
+                       tile_of_block=jnp.asarray(th.tob),
+                       first_of_tile=jnp.asarray(th.fot),
+                       touched=jnp.asarray(th.touched))
+
+
+# --------------------------------------------------------------------- patch
+def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
+               overlay: Overlay | None = None,
+               growth: float = 2.0) -> PatchResult:
+    """Apply one ``OverlayDelta`` to a live plan.
+
+    In-capacity updates mutate ``plan`` in place (new ``PlanArrays`` pytree,
+    same ``PlanMeta`` — so every jitted body keeps its compiled program);
+    overflows recompile with ``growth`` headroom. ``overlay`` is only needed
+    on the first patch of a plan, to seed the host mirror; it must be the
+    (unpruned) overlay the plan was compiled from."""
+    if delta.empty:
+        return PatchResult(plan, False, "empty delta", None, [], {})
+    host: PlanHost = plan.host  # type: ignore[assignment]
+    if host is None:
+        if overlay is None:
+            raise ValueError("first patch_plan call needs overlay= to seed "
+                             "the host mirror")
+        host = PlanHost.from_plan(plan, overlay)
+        plan.host = host
+    meta = plan.meta
+    cap = meta.n_nodes
+    stats = {"edges_added": 0, "edges_removed": 0, "levels_rebuilt": 0,
+             "demand_levels": 0, "slot_levels": 0}
+
+    # ---------------------------------------------- phase A: graph mirror
+    for _ in range(delta.n_nodes_after - len(host.kinds)):
+        host.kinds.append("I")
+        host.origin.append(-1)
+        host.in_edges.append([])
+        host.out.append([])
+    if delta.n_nodes_after > len(host.decision):
+        extra = delta.n_nodes_after - len(host.decision)
+        host.decision = np.concatenate(
+            [host.decision, np.full(extra, PULL, np.int64)])
+        host.level = np.concatenate([host.level, np.zeros(extra, np.int64)])
+    for nid, patch in delta.nodes.items():
+        for s, _ in host.in_edges[nid]:
+            host.out[s].remove(nid)
+        host.in_edges[nid] = list(patch.edges)
+        for s, _ in patch.edges:
+            host.out[s].append(nid)
+        host.kinds[nid] = patch.kind
+        host.origin[nid] = patch.origin
+    host.n_real = max(host.n_real, delta.n_nodes_after)
+    host.retired_writer_bases |= delta.retired_writers
+    host.retired_writer_bases -= set(delta.new_writers)
+
+    changed_level = _relax_levels(host, set(delta.nodes))
+    changed_dec = _update_decisions(host, delta)
+    depth = int(host.level[: host.n_real].max()) if host.n_real else 0
+
+    retired_rows = [plan.writer_row_of_base[b] for b in delta.retired_writers
+                    if b in plan.writer_row_of_base]
+
+    # ---------------------------------------------- phase B: capacity gates
+    def fallback(reason: str) -> PatchResult:
+        new_plan, new_overlay = _recompile(plan, host, growth)
+        _apply_base_maps(new_plan, host, delta)
+        stats["reason"] = reason
+        return PatchResult(new_plan, True, reason, new_overlay,
+                           retired_rows, stats)
+
+    if host.n_real > cap:
+        return fallback("node capacity")
+    if len(plan.writer_node) + len(delta.new_writer_nodes) > meta.n_writers:
+        return fallback("writer capacity")
+    if depth > meta.n_levels:
+        return fallback("level capacity")
+    if meta.backend == "xla_unrolled" and depth != plan.depth:
+        return fallback("unrolled depth changed")
+
+    # ---------------------------------------------- phase C: table patching
+    rehome = set(delta.nodes) | changed_level | changed_dec
+    pend = {"push": {}, "pull": {}}
+    rebuild = {"push": set(), "pull": set()}
+    demand_levels: set[int] = set()
+    try:
+        for d in sorted(rehome):
+            new_table = _table_of(host, d)
+            new_l = int(host.level[d]) - 1 if new_table else -1
+            old = None
+            for name in ("push", "pull"):
+                th = getattr(host, name)
+                if d in th.level_of:
+                    old = (name, th.level_of[d])
+                    break
+            if old and old[0] == "pull":
+                demand_levels.add(old[1])
+            if new_table == "pull":
+                demand_levels.add(new_l)
+            if old == (new_table, new_l):
+                _diff_in_place(getattr(host, new_table), d,
+                               host.in_edges[d], new_l,
+                               pend[new_table], rebuild[new_table], stats)
+            else:
+                if old:
+                    _free_slots(getattr(host, old[0]), d, pend[old[0]], stats)
+                if new_table:
+                    _claim_slots(getattr(host, new_table), d,
+                                 host.in_edges[d], new_l,
+                                 pend[new_table], rebuild[new_table], stats)
+        for v in changed_dec:
+            for c in host.out[v]:
+                if host.level[c] >= 1 and host.decision[c] == PULL:
+                    demand_levels.add(int(host.level[c]) - 1)
+        for name in ("push", "pull"):
+            th = getattr(host, name)
+            for l in sorted(rebuild[name]):
+                _rebuild_level(host, th, name, l, cap, meta.n_row_tiles)
+                stats["levels_rebuilt"] += 1
+        # demand rows
+        d_pad = plan.arrays.demand_dst.shape[1]
+        new_demand_rows = {}
+        for l in sorted(demand_levels):
+            pairs = []
+            for d in np.flatnonzero(host.level[: host.n_real] == l + 1):
+                if host.decision[d] != PULL:
+                    continue
+                for s, _ in host.in_edges[int(d)]:
+                    if host.decision[s] == PULL:
+                        pairs.append((int(d), int(s)))
+            if len(pairs) > d_pad:
+                raise CapacityExceeded(f"demand level {l} needs {len(pairs)} "
+                                       f"> {d_pad} slots")
+            new_demand_rows[l] = pairs
+    except CapacityExceeded as e:
+        return fallback(str(e))
+
+    # ---------------------------------------------- phase D: device sync
+    arrays = plan.arrays
+    push_t = _sync_table(arrays.push, host.push, pend["push"],
+                         rebuild["push"], cap)
+    pull_t = _sync_table(arrays.pull, host.pull, pend["pull"],
+                         rebuild["pull"], cap)
+    dd, ds = arrays.demand_dst, arrays.demand_src
+    if new_demand_rows:
+        dd_h, ds_h = np.array(dd), np.array(ds)
+        for l, pairs in sorted(new_demand_rows.items()):
+            host.demand[l] = pairs
+            dd_h[l] = cap
+            ds_h[l] = cap
+            if pairs:
+                arr = np.asarray(pairs, np.int64)
+                dd_h[l, : len(pairs)] = arr[:, 0]
+                ds_h[l, : len(pairs)] = arr[:, 1]
+        dd, ds = jnp.asarray(dd_h), jnp.asarray(ds_h)
+    decision = arrays.decision
+    if changed_dec:
+        decision = jnp.asarray(host.decision[:cap].astype(np.int32))
+    writer_node = arrays.writer_node
+    # every new W-kind node claims a row (id order), even if it was deleted
+    # within this epoch — keeps row positions identical to what a recompile
+    # over the unpruned overlay would assign, so window state migrates by
+    # position safely
+    for nid in sorted(delta.new_writer_nodes):
+        plan.writer_node = np.append(plan.writer_node, nid)
+    if delta.new_writer_nodes:
+        wnode = np.full(meta.n_writers, cap, np.int32)
+        wnode[: len(plan.writer_node)] = plan.writer_node
+        writer_node = jnp.asarray(wnode)
+    plan.arrays = PlanArrays(decision=decision, writer_node=writer_node,
+                             push=push_t, pull=pull_t,
+                             demand_dst=dd, demand_src=ds)
+
+    # ---------------------------------------------- phase E: plan metadata
+    plan.depth = depth
+    plan.level = host.level[: host.n_real].copy()
+    plan.decision = host.decision[: host.n_real].copy()
+    plan.n_push_edges = host.push.n_edges()
+    plan.n_pull_edges = host.pull.n_edges()
+    plan.patches_applied += 1
+    _apply_base_maps(plan, host, delta)
+    stats["slot_levels"] = len(set(pend["push"]) | set(pend["pull"]))
+    stats["demand_levels"] = len(new_demand_rows)
+    return PatchResult(plan, False, None, None, retired_rows, stats)
+
+
+def _apply_base_maps(plan: ExecPlan, host: PlanHost,
+                     delta: OverlayDelta) -> None:
+    """Reconcile base-id -> row/node maps with the delta (both patch and
+    recompile paths)."""
+    for b in delta.retired_writers:
+        if b not in delta.new_writers:
+            plan.writer_row_of_base.pop(b, None)
+    for b, nid in delta.new_writers.items():
+        row = int(np.flatnonzero(plan.writer_node == nid)[0]) \
+            if (plan.writer_node == nid).any() else None
+        if row is not None:
+            plan.writer_row_of_base[b] = row
+    for b in delta.retired_readers:
+        if b not in delta.new_readers:
+            plan.reader_node_of_base.pop(b, None)
+    for nid, patch in delta.nodes.items():
+        o = patch.origin
+        if patch.kind == "R":
+            plan.reader_node_of_base[o] = nid
+        elif o >= 0 and plan.reader_node_of_base.get(o) == nid:
+            plan.reader_node_of_base.pop(o, None)
+    for b in host.retired_writer_bases:
+        plan.writer_row_of_base.pop(b, None)
+
+
+def _recompile(plan: ExecPlan, host: PlanHost,
+               growth: float) -> tuple[ExecPlan, Overlay]:
+    """Capacity-overflow fallback: a fresh ``compile_plan`` over the host
+    mirror's (unpruned) overlay with ``growth`` headroom on every padded
+    dimension, so the following churn burst patches in place again."""
+    ov = host.export_overlay()
+    dec = host.decision[: host.n_real].copy()
+    pad = grow_pad(measure_plan(ov, dec), growth)
+    new = compile_plan(ov, dec, backend=plan.meta.backend, pad=pad)
+    new.patches_applied = plan.patches_applied
+    new.host = PlanHost.from_plan(new, ov)
+    new.host.retired_writer_bases = set(host.retired_writer_bases)
+    return new, ov

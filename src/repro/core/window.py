@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aggregates import Aggregate
 
@@ -173,6 +174,59 @@ def apply_writes(
     new_count = jnp.minimum(state.count + k_row[:n_rows], cap)
     return (WindowState(new_vals, new_stms, new_head, new_count),
             evicted, evicted_valid)
+
+
+def stale_rows(state: WindowState, spec: WindowSpec,
+               prev_now: jnp.ndarray | float,
+               now: jnp.ndarray | float) -> jnp.ndarray:
+    """(n_writers,) bool — rows holding an entry that was inside the time
+    window at ``prev_now`` but has expired by ``now``. The union of these
+    rows with the written rows is exactly the set whose window aggregate can
+    have changed between two evaluations — the non-invertible write path
+    restricts its recompute to that set instead of every writer."""
+    if spec.kind != "time":
+        return jnp.zeros((state.stamps.shape[0],), bool)
+    lo = jnp.asarray(prev_now, jnp.float32) - spec.size
+    hi = jnp.asarray(now, jnp.float32) - spec.size
+    return ((state.stamps >= lo) & (state.stamps < hi)).any(axis=1)
+
+
+def pad_window_rows(state: WindowState, n_rows: int) -> WindowState:
+    """Resize the window arrays to ``n_rows`` writer rows (state migration
+    when a plan recompile changes writer capacity). Existing rows keep their
+    ids — writer rows are append-only under churn — new rows start empty, and
+    shrinking only ever drops never-written padding rows."""
+    cur = state.values.shape[0]
+    if cur == n_rows:
+        return state
+    if cur > n_rows:
+        return WindowState(values=state.values[:n_rows],
+                           stamps=state.stamps[:n_rows],
+                           head=state.head[:n_rows],
+                           count=state.count[:n_rows])
+    pad = n_rows - cur
+    return WindowState(
+        values=jnp.concatenate(
+            [state.values,
+             jnp.zeros((pad,) + state.values.shape[1:], jnp.float32)]),
+        stamps=jnp.concatenate(
+            [state.stamps,
+             jnp.full((pad,) + state.stamps.shape[1:], -jnp.inf, jnp.float32)]),
+        head=jnp.concatenate([state.head, jnp.zeros((pad,), jnp.int32)]),
+        count=jnp.concatenate([state.count, jnp.zeros((pad,), jnp.int32)]),
+    )
+
+
+def reset_window_rows(state: WindowState, rows) -> WindowState:
+    """Zero the given writer rows (retired writers: their content leaves every
+    window immediately, per §3.3 node deletion)."""
+    rows = jnp.asarray(np.asarray(rows, dtype=np.int32))
+    return WindowState(
+        values=state.values.at[rows].set(0.0),
+        stamps=state.stamps.at[rows].set(-jnp.inf),
+        head=state.head.at[rows].set(0),
+        count=state.count.at[rows].set(0),
+    )
 
 
 def live_mask(state: WindowState, spec: WindowSpec, now: jnp.ndarray | float) -> jnp.ndarray:

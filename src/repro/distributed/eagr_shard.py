@@ -31,7 +31,14 @@ import numpy as np
 
 from repro.core.aggregates import Aggregate
 from repro.core.dataflow import PULL, PUSH
-from repro.core.engine import ExecPlan, PlanPad, compile_plan, measure_plan
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import (
+    ExecPlan,
+    PlanPad,
+    compile_plan,
+    measure_plan,
+    plan_dims,
+)
 from repro.core.overlay import Overlay
 
 
@@ -158,6 +165,136 @@ def _project_decisions(full: Overlay, decisions: np.ndarray,
         if dec[v] == PUSH and any(dec[s] == PULL for s, _ in sub.in_edges[v]):
             dec[v] = PULL
     return dec
+
+
+class ShardedDynamic:
+    """Structural churn (§3.3) over a reader-partitioned deployment.
+
+    Each shard adopts its sub-overlay into a ``DynamicOverlay`` (node ids
+    align 1:1 with the shard's compiled plan, so deltas patch in place).
+    Base-graph mutations are routed to the shards that own the affected
+    readers — a writer-side change fans out to every shard consuming the
+    writer, mirroring how writes themselves are replicated. ``apply()``
+    drains every shard's delta, patches the owning plans (through the shard
+    engines when given, migrating their state), then re-runs the
+    ``align_shard_plans`` dims check: if any shard fell back to a recompile
+    with growth headroom, the remaining shards are recompiled to the same
+    padded shape so execution stays on one compiled program."""
+
+    def __init__(self, sharded: ShardedOverlay, engines: list | None = None,
+                 *, growth: float = 2.0):
+        self.sharded = sharded
+        self.engines = engines
+        self.growth = growth
+        self.dynamics: list[DynamicOverlay] = []
+        for sub in sharded.shards:
+            sets = sub.input_writer_sets()
+            ris = {sub.origin[v]: set(sets[v]) for v in sub.reader_nodes()}
+            self.dynamics.append(DynamicOverlay.from_overlay(sub, ris))
+
+    # --------------------------------------------------------------- routing
+    def _owner(self, reader: int) -> int:
+        s = self.sharded.reader_shard.get(int(reader))
+        if s is None:  # new reader: deterministic assignment
+            s = int(reader) % self.sharded.n_shards
+            self.sharded.reader_shard[int(reader)] = s
+        return s
+
+    def route(self, affected: dict[int, set[int]]) -> dict[int, dict[int, set[int]]]:
+        """Split one {reader: delta_writers} map by owning shard."""
+        per_shard: dict[int, dict[int, set[int]]] = {}
+        for r, delta in affected.items():
+            per_shard.setdefault(self._owner(r), {})[r] = set(delta)
+        return per_shard
+
+    def add_edge(self, u: int, v: int,
+                 affected: dict[int, set[int]] | None = None) -> None:
+        for s, aff in self.route(affected if affected is not None else {v: {u}}).items():
+            self.dynamics[s].add_edge(u, v, affected=aff)
+
+    def delete_edge(self, u: int, v: int,
+                    affected: dict[int, set[int]] | None = None) -> None:
+        for s, aff in self.route(affected if affected is not None else {v: {u}}).items():
+            self.dynamics[s].delete_edge(u, v, affected=aff)
+
+    def add_node(self, u: int, in_neighbors: set[int],
+                 out_readers: set[int]) -> None:
+        # u's home shard tracks its write stream from day one (matching the
+        # single-machine engine, where the writer window exists immediately);
+        # other shards start u's window empty when a reader there follows u
+        # later — cross-shard window backfill on new subscriptions is a known
+        # gap (would need a state transfer, see ROADMAP).
+        self.dynamics[self._owner(u)].b.add_writer(u)
+        for s, aff in self.route({r: {u} for r in out_readers}).items():
+            for r, delta in aff.items():
+                self.dynamics[s].add_reader_inputs(r, delta)
+        if in_neighbors:
+            self.dynamics[self._owner(u)].add_reader_inputs(u, set(in_neighbors))
+
+    def delete_node(self, u: int) -> None:
+        for s, dyn in enumerate(self.dynamics):
+            if u in dyn.b.writer_node or u in dyn.reader_node:
+                dyn.delete_node(u)
+        self.sharded.reader_shard.pop(int(u), None)
+
+    # ----------------------------------------------------------------- apply
+    def apply(self) -> list:
+        """Drain every shard's delta and patch the owning plans, then restore
+        the one-program-shape invariant. Returns per-shard ``PatchResult``
+        (None for untouched shards)."""
+        from repro.core.plan_patch import patch_plan
+
+        results = []
+        for s, dyn in enumerate(self.dynamics):
+            delta = dyn.drain_delta()
+            if delta.empty:
+                results.append(None)
+                continue
+            if self.engines is not None:
+                res = self.engines[s].apply_delta(delta, growth=self.growth)
+                self.sharded.shard_plans[s] = self.engines[s].plan
+            else:
+                res = patch_plan(self.sharded.shard_plans[s], delta,
+                                 overlay=self.sharded.shards[s],
+                                 growth=self.growth)
+                self.sharded.shard_plans[s] = res.plan
+            self.sharded.writer_rows[s] = res.plan.writer_row_of_base
+            results.append(res)
+        self.ensure_aligned()
+        return results
+
+    def ensure_aligned(self) -> bool:
+        """Re-run the ``align_shard_plans`` dims check; recompile any shard
+        whose padded dims diverged (a growth-headroom fallback) to the
+        element-wise maximum so all shards share one program shape again.
+        Returns True if a realign was needed."""
+        from repro.core.plan_patch import PlanHost
+
+        plans = self.sharded.shard_plans
+        dims = [plan_dims(p) for p in plans]
+        if all(d == dims[0] for d in dims[1:]):
+            return False
+        target = PlanPad(**{f: max(getattr(d, f) for d in dims)
+                            for f in PlanPad.__dataclass_fields__})
+        for s, p in enumerate(plans):
+            if plan_dims(p) == target:
+                continue
+            host = p.host
+            ov = host.export_overlay() if host is not None \
+                else self.sharded.shards[s]
+            new = compile_plan(ov, p.decision, backend=p.meta.backend,
+                               pad=target)
+            if host is not None:
+                for b in host.retired_writer_bases:
+                    new.writer_row_of_base.pop(b, None)
+                new.host = PlanHost.from_plan(new, ov)
+                new.host.retired_writer_bases = set(host.retired_writer_bases)
+            new.patches_applied = p.patches_applied
+            if self.engines is not None:
+                self.engines[s].adopt_plan(new)
+            plans[s] = new
+            self.sharded.writer_rows[s] = new.writer_row_of_base
+        return True
 
 
 def shard_write_batch(sharded: ShardedOverlay, base_ids: np.ndarray,

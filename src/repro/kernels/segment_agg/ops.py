@@ -137,6 +137,8 @@ class LeveledPlan:
     tile_of_block: np.ndarray   # (L, n_blocks) int32
     first_of_tile: np.ndarray   # (L, n_blocks) int32
     perms: tuple                # per level: original edge index -> padded slot
+    tile_slots: np.ndarray      # (L, n_row_tiles, 2) int32 [start, stop) slot
+                                # range routed to each row tile (free-slot pool)
     n_rows: int
     n_row_tiles: int
     n_levels: int
@@ -151,6 +153,74 @@ class LeveledPlan:
                       dtype=dtype or values.dtype)
         out[self.perms[level]] = values
         return out
+
+
+def tile_slot_ranges(tob_row: np.ndarray, n_row_tiles: int) -> np.ndarray:
+    """Per-tile claimable slot ranges of one level's block routing.
+
+    Blocks routed to the same tile are consecutive (the kernel's revisit
+    invariant), so each tile owns at most one run of blocks; padding blocks
+    are routed to the last real tile and therefore extend its run. Returns
+    (n_row_tiles, 2) int32 [start, stop) slot ranges; tiles with no blocks
+    get an empty range. A slot is *free* iff it lies in its tile's range and
+    currently holds ``seg == -1``.
+    """
+    tob_row = np.asarray(tob_row, dtype=np.int64)
+    out = np.zeros((n_row_tiles, 2), dtype=np.int32)
+    for t in range(n_row_tiles):
+        hit = np.flatnonzero(tob_row == t)
+        if hit.size:
+            out[t, 0] = hit[0] * E_BLK
+            out[t, 1] = (hit[-1] + 1) * E_BLK
+    return out
+
+
+def patch_level(seg: jnp.ndarray, src: jnp.ndarray, sign: jnp.ndarray,
+                level: int, slots: np.ndarray, seg_vals: np.ndarray,
+                src_vals: np.ndarray, sign_vals: np.ndarray):
+    """Rewrite individual edge slots of one level in the stacked tables.
+
+    Retiring an edge writes ``seg=-1, src=0, sign=0`` (the padding pattern —
+    every backend drops it); a new edge claims a free slot inside the owning
+    tile's block range. Padded dims are untouched, so a jitted program over
+    the tables keeps its compiled shape. Returns the three updated tables.
+    """
+    sl = jnp.asarray(np.asarray(slots, dtype=np.int64))
+    return (
+        seg.at[level, sl].set(jnp.asarray(np.asarray(seg_vals, np.int32))),
+        src.at[level, sl].set(jnp.asarray(np.asarray(src_vals, np.int32))),
+        sign.at[level, sl].set(jnp.asarray(np.asarray(sign_vals, np.float32))),
+    )
+
+
+def relayout_level(dst: np.ndarray, src: np.ndarray, sign: np.ndarray,
+                   n_rows: int, n_blocks: int, e_pad: int):
+    """Rebuild one level's full kernel-layout rows from its current edge set.
+
+    The medium-cost patch path: used when a slot claim fails (tile overflow /
+    previously-empty tile) but the level still fits the plan's per-level block
+    budget. Returns ``(seg_row, src_row, sign_row, tob_row, fot_row)`` padded
+    to ``(e_pad,)`` / ``(n_blocks,)``, or ``None`` if the level needs more
+    than ``n_blocks`` blocks (caller falls back to a full recompile).
+    """
+    p = make_plan(np.asarray(dst, dtype=np.int64), n_rows)
+    k = p.tile_of_block.size
+    if k > n_blocks:
+        return None
+    seg_row = np.full(e_pad, -1, dtype=np.int32)
+    src_row = np.zeros(e_pad, dtype=np.int32)
+    sign_row = np.zeros(e_pad, dtype=np.float32)
+    seg_row[: p.e_pad] = p.seg_padded
+    src_row[p.perm] = np.asarray(src, dtype=np.int32)
+    sign_row[p.perm] = np.asarray(sign, dtype=np.float32)
+    tob_row = np.zeros(n_blocks, dtype=np.int32)
+    fot_row = np.zeros(n_blocks, dtype=np.int32)
+    tob_row[:k] = p.tile_of_block
+    tob_row[k:] = p.tile_of_block[-1] if k else 0  # keep revisits consecutive
+    fot_row[:k] = p.first_of_tile
+    if k == 0:
+        fot_row[0] = 1  # empty level: init tile 0, aggregate nothing
+    return seg_row, src_row, sign_row, tob_row, fot_row
 
 
 def count_blocks(seg: np.ndarray) -> int:
@@ -207,9 +277,12 @@ def make_leveled_plan(segs: list[np.ndarray], n_rows: int, *,
     for l in range(L_real, L):
         fot[l, 0] = 1  # dummy level: init tile 0, aggregate nothing
         perms.append(np.zeros(0, dtype=np.int64))
+    n_row_tiles = max(1, -(-n_rows // R_BLK))
+    tile_slots = np.stack([tile_slot_ranges(tob[l], n_row_tiles)
+                           for l in range(L)])
     return LeveledPlan(
         seg=seg, tile_of_block=tob, first_of_tile=fot, perms=tuple(perms),
-        n_rows=n_rows, n_row_tiles=max(1, -(-n_rows // R_BLK)),
+        tile_slots=tile_slots, n_rows=n_rows, n_row_tiles=n_row_tiles,
         n_levels=L, e_pad=e_pad,
     )
 
