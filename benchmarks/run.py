@@ -22,9 +22,13 @@ def main(argv=None) -> None:
     p.add_argument("--dynamic", action="store_true",
                    help="run the structural-churn benchmark (patch vs "
                         "recompile, §3.3) and emit BENCH_dynamic.json")
+    p.add_argument("--sharded", action="store_true",
+                   help="run the stacked shard_map vs per-shard host loop "
+                        "benchmark at 2/4/8 shards (forces 8 host devices) "
+                        "and emit BENCH_sharded.json")
     p.add_argument("--check", action="store_true",
-                   help="with --dynamic: exit nonzero if the patch path "
-                        "regresses below the speedup floor")
+                   help="with --dynamic/--sharded: exit nonzero if the "
+                        "measured path regresses below its floor")
     args = p.parse_args(argv)
 
     if args.engine:
@@ -34,6 +38,10 @@ def main(argv=None) -> None:
     if args.dynamic:
         from benchmarks.dynamic_bench import run_dynamic_bench
         run_dynamic_bench(quick=args.quick, check=args.check)
+        return
+    if args.sharded:
+        from benchmarks.sharded_bench import run_sharded_bench
+        run_sharded_bench(quick=args.quick, check=args.check)
         return
 
     import benchmarks.paper_figures as F

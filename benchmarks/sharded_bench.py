@@ -1,0 +1,154 @@
+"""Stacked shard_map execution vs the per-shard host loop -> BENCH_sharded.json.
+
+Measures the PR-3 refactor end to end at 2/4/8 shards: one global write batch
+plus one global read batch per step, through
+
+  * host_loop — ``shard_write_batch`` / ``shard_read_batch`` host routing and
+    n_shards sequential jitted per-shard dispatches (the pre-stacking path,
+    kept as the parity baseline), and
+  * stacked   — ``StackedShardedEngine``: one ``shard_map`` program over the
+    device mesh (vmap fallback when devices < shards), batch routing
+    on-device via all-gather + owner maps, reads gathered by one psum.
+
+The process forces 8 host CPU devices (when jax is not yet initialized) so
+the CPU CI smoke exercises the real collective path.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --sharded [--quick] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+import time
+
+if "jax" not in sys.modules:  # must precede first jax init
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = \
+            (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.engine import EagrEngine
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.distributed.eagr_shard import (
+    host_loop_read,
+    host_loop_write,
+    partition_overlay,
+)
+from repro.distributed.stacked import StackedShardedEngine
+from repro.graphs.generators import rmat_graph
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sharded.json")
+
+SHARD_COUNTS = (2, 4, 8)
+
+
+def _host_loop_step(sharded, engines, ids, vals, readers):
+    host_loop_write(sharded, engines, ids, vals)
+    return host_loop_read(sharded, engines, readers)
+
+
+def run_sharded_bench(quick: bool = False, out_path: str = OUT_PATH,
+                      check: bool = False) -> dict:
+    graph = dict(n_nodes=2_000, n_edges=12_000) if quick else \
+        dict(n_nodes=6_000, n_edges=36_000)
+    steps = 12 if quick else 30
+    batch = 256
+    g = rmat_graph(seed=0, **graph)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    rng = np.random.default_rng(1)
+    wf = rng.zipf(1.6, graph["n_nodes"]).clip(1, 1000).astype(np.float64)
+    rf = wf[rng.permutation(graph["n_nodes"])]
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 8)
+    readers_all = np.array(list(bp.reader_input_sets()))
+
+    report = {
+        "bench": "sharded_stacked_vs_host_loop",
+        "device": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "graph": graph,
+        "batch": batch,
+        "steps_per_config": steps,
+        "shards": {},
+    }
+    for S in SHARD_COUNTS:
+        sharded = partition_overlay(ov, dec, n_shards=S, seed=0)
+        stacked = StackedShardedEngine(sharded, agg, spec)
+        engines = [EagrEngine(s, d, agg, spec, plan=p)
+                   for s, d, p in zip(sharded.shards,
+                                      sharded.shard_decisions,
+                                      sharded.shard_plans)]
+
+        def make_batch():
+            ids = rng.choice(bp.writers, batch)
+            vals = rng.normal(size=batch).astype(np.float32)
+            readers = rng.choice(readers_all, batch)
+            return ids, vals, readers
+
+        # warm both paths + parity check (bit-identical by construction)
+        ids, vals, readers = make_batch()
+        stacked.write_batch(ids, vals, batch_size=batch)
+        want = _host_loop_step(sharded, engines, ids, vals, readers)
+        got = stacked.read_batch(readers, batch_size=batch)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+        # interleave the two paths so scheduler drift (2-core CI runners with
+        # 8 forced devices oversubscribe heavily) hits both medians alike
+        batches = [make_batch() for _ in range(steps)]
+        loop_s, stacked_s = [], []
+        for ids, vals, readers in batches:
+            t0 = time.perf_counter()
+            _host_loop_step(sharded, engines, ids, vals, readers)
+            jax.block_until_ready(engines[-1].state.pao)
+            loop_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            stacked.write_batch(ids, vals, batch_size=batch)
+            stacked.read_batch(readers, batch_size=batch)
+            jax.block_until_ready(stacked.state.pao)
+            stacked_s.append(time.perf_counter() - t0)
+
+        loop_med = statistics.median(loop_s)
+        stacked_med = statistics.median(stacked_s)
+        row = {
+            "mode": "shard_map" if stacked.mesh is not None else "vmap",
+            "host_loop_s_median": round(loop_med, 5),
+            "stacked_s_median": round(stacked_med, 5),
+            "host_loop_steps_per_s": round(1.0 / loop_med, 1),
+            "stacked_steps_per_s": round(1.0 / stacked_med, 1),
+            "speedup_stacked_vs_loop": round(loop_med / stacked_med, 2),
+        }
+        report["shards"][str(S)] = row
+        print(f"sharded/S={S}: {row}", flush=True)
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+
+    if check:
+        # the claim is scaling: at SOME shard count >= 4 the one-program path
+        # must beat the sequential host loop (per-count medians are noisy on
+        # oversubscribed CI cores, so gate on the best, not the worst)
+        best = max(r["speedup_stacked_vs_loop"]
+                   for s, r in report["shards"].items() if int(s) >= 4)
+        if best < 1.0:
+            raise SystemExit(
+                f"stacked-path regression: best speedup {best:.2f}x < 1.0x "
+                f"at >=4 shards — the one-program path must beat the host loop")
+        print(f"check passed: stacked {best:.2f}x host loop at >=4 shards")
+    return report
+
+
+if __name__ == "__main__":
+    run_sharded_bench(quick="--quick" in sys.argv, check="--check" in sys.argv)

@@ -401,10 +401,16 @@ def _level_loop(meta: PlanMeta, body, init):
     return jax.lax.fori_loop(0, meta.n_levels, body, init)
 
 
-# ----------------------------------------------------------------- jit bodies
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _write_body_sum(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
-                    arrays: PlanArrays, state: EngineState, rows, vals, mask):
+# ---------------------------------------------------------------- step bodies
+# The write/read/refresh bodies are *pure* functions of
+# ``(meta, agg, spec, arrays, state, batch) -> state`` with no per-engine
+# Python state: ``meta`` is static shape info, everything else is traced
+# arrays. They are exposed unjitted (``write_step_sum`` etc.) so callers can
+# embed them in larger programs — ``distributed/stacked.py`` vmaps/shard_maps
+# them over a leading shard axis — while the jitted single-engine wrappers
+# below keep their own cache entries.
+def write_step_sum(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                   arrays: PlanArrays, state: EngineState, rows, vals, mask):
     windows, evicted, evicted_valid = apply_writes(
         state.windows, spec, rows, vals,
         jnp.full(rows.shape, state.now, jnp.float32), mask)
@@ -424,10 +430,9 @@ def _write_body_sum(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
     return EngineState(windows, pao, state.now + 1.0)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _write_body_extremal(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
-                         arrays: PlanArrays, state: EngineState, rows, vals,
-                         mask, prev_now):
+def write_step_extremal(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                        arrays: PlanArrays, state: EngineState, rows, vals,
+                        mask, prev_now):
     """Non-invertible write path, restricted to the *touched* writer set: the
     rows written this batch plus (time windows) the rows with an entry that
     expired since ``prev_now`` — the last instant writer PAOs were evaluated.
@@ -467,9 +472,8 @@ def _write_body_extremal(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
     return EngineState(windows, pao, state.now + 1.0)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _refresh_pao(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
-                 arrays: PlanArrays, windows, now) -> jnp.ndarray:
+def refresh_pao_step(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                     arrays: PlanArrays, windows, now) -> jnp.ndarray:
     """Recompute the full PAO array from the writer windows through the push
     tables — the state repair after a structural patch (``apply_delta``):
     rewired push nodes get exact values, retired rows fall back to the
@@ -486,9 +490,8 @@ def _refresh_pao(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
     return _level_loop(meta, level, pao)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _read_body(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
-               state: EngineState, reader_nodes, mask):
+def read_step(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
+              state: EngineState, reader_nodes, mask):
     decision = arrays.decision
     demand = jnp.zeros((meta.n_nodes + 1,), dtype=jnp.bool_)
     is_pull_target = mask & (decision[reader_nodes] == PULL)
@@ -511,6 +514,38 @@ def _read_body(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
     val = _level_loop(meta, level, val)
     answers = val[reader_nodes]
     return agg.finalize(answers), answers
+
+
+# Single-engine jitted entry points over the pure step bodies.
+_write_body_sum = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2))(write_step_sum)
+_write_body_extremal = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2))(write_step_extremal)
+_refresh_pao = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2))(refresh_pao_step)
+_read_body = functools.partial(jax.jit, static_argnums=(0, 1))(read_step)
+
+
+# ------------------------------------------------------------- stacked pytrees
+def stack_plan_arrays(arrays: list[PlanArrays]) -> PlanArrays:
+    """Stack aligned per-shard ``PlanArrays`` along a new leading shard axis.
+    All inputs must share one program shape (``align_shard_plans``)."""
+    shapes = {jax.tree.map(jnp.shape, a) for a in arrays}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack misaligned plan arrays: {shapes}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+
+
+def plan_arrays_shard(stacked: PlanArrays, s: int) -> PlanArrays:
+    """One shard's slice of a stacked ``PlanArrays`` pytree."""
+    return jax.tree.map(lambda x: x[s], stacked)
+
+
+def place_plan_arrays(stacked: PlanArrays, s: int,
+                      arrays: PlanArrays) -> PlanArrays:
+    """Write one shard's (patched) tables back into the stacked pytree —
+    shapes must match, so jitted consumers keep their compiled program."""
+    return jax.tree.map(lambda st, x: st.at[s].set(x), stacked, arrays)
 
 
 # ----------------------------------------------------------------------- API

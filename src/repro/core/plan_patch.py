@@ -9,8 +9,9 @@ escalating tiers:
   1. **slot patch** — a retired edge's slot is neutralized in place
      (``seg=-1, src=0, sign=0``: the padding pattern every backend drops);
      a new edge claims a free slot inside the owning row tile's block range.
-     Host mirrors mutate slot-wise; the device copy syncs as one whole-table
-     upload (see ``_sync_table`` for why that beats eager scatters here —
+     Host mirrors mutate slot-wise; the device copy syncs through jitted
+     scatters whose index counts are bucketed to powers of two (see
+     ``_sync_table`` — bounded jit cache, only changed slots travel;
      ``ops.patch_level`` remains the in-place primitive for jit-resident
      table updates). Milliseconds, zero shape changes.
   2. **level relayout** — when a tile has no free slot (or a destination
@@ -35,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 from collections import Counter, deque
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -340,28 +342,106 @@ def _rebuild_level(host: PlanHost, th: TableHost, table: str, l: int,
     th.index_level(l)
 
 
+_SLOT_BUCKET = 64  # scatter index-count floor; buckets grow by powers of 4
+
+
+def _bucket_count(n: int) -> int:
+    """Bucket scatter index counts to ``64 * 4**k``: the jitted scatters
+    below are cache-keyed by their index shape, so distinct slot counts would
+    otherwise each compile their own executable (~45ms on CPU). A coarse
+    geometric ladder keeps the whole cache at a handful of executables —
+    padding entries are idempotent duplicate writes, and scattering 4x more
+    indices than needed is noise next to the table copy itself."""
+    b = _SLOT_BUCKET
+    while b < n:
+        b *= 4
+    return b
+
+
+@jax.jit
+def _scatter_slot_patch(seg, src, sign, lvl, slot, seg_v, src_v, sign_v):
+    """Rewrite individual (level, slot) entries of the stacked edge tables
+    (the device-side twin of ``ops.patch_level``, batched across levels)."""
+    return (seg.at[lvl, slot].set(seg_v),
+            src.at[lvl, slot].set(src_v),
+            sign.at[lvl, slot].set(sign_v))
+
+
+@jax.jit
+def _scatter_level_rows(seg, src, sign, tob, fot, lvls,
+                        seg_r, src_r, sign_r, tob_r, fot_r):
+    """Replace whole level rows (the relayout path)."""
+    return (seg.at[lvls].set(seg_r), src.at[lvls].set(src_r),
+            sign.at[lvls].set(sign_r), tob.at[lvls].set(tob_r),
+            fot.at[lvls].set(fot_r))
+
+
+@jax.jit
+def _scatter_touched(touched, lvls, rows):
+    return touched.at[lvls].set(rows)
+
+
 def _sync_table(t: LevelTables, th: TableHost, pend: dict, rebuilds: set,
                 cap: int) -> LevelTables:
     """Push the host mirror's changed slots/rows to the device tables without
     changing any padded dim (so jitted consumers keep their programs).
 
-    The mirrors are re-uploaded wholesale (a plain device transfer): an eager
-    ``.at[].set`` would copy the full table anyway *and* compile one scatter
-    executable per distinct slot-count — measured 45ms per new shape on CPU,
-    dwarfing the tables themselves. ``ops.patch_level`` remains the narrow
-    in-place primitive for jit-resident use (and the unit tests)."""
+    Slot-level changes go through a jitted scatter whose index count is
+    bucketed (``_bucket_count`` — padding repeats the last entry, an
+    idempotent duplicate write), so the jit cache holds a handful of
+    executables per table shape instead of one per distinct slot count, and
+    only the changed slots/rows travel to the device. Heavy churn — changed
+    slots plus rebuilt rows approaching the table itself — falls back to the
+    wholesale re-upload, which is one plain transfer with no scatter at all."""
     if not (pend or rebuilds):
         return t
-    for l in sorted(set(pend) | rebuilds):
+    changed_levels = sorted(set(pend) | rebuilds)
+    for l in changed_levels:
         row = np.zeros(cap, bool)
         segl = th.seg[l]
         row[segl[segl >= 0]] = True
         th.touched[l] = row
-    return LevelTables(seg=jnp.asarray(th.seg), src=jnp.asarray(th.src),
-                       sign=jnp.asarray(th.sign),
-                       tile_of_block=jnp.asarray(th.tob),
-                       first_of_tile=jnp.asarray(th.fot),
-                       touched=jnp.asarray(th.touched))
+
+    L, e_pad = th.seg.shape
+    entries = [(l, s) for l in sorted(set(pend) - rebuilds)
+               for s in sorted(pend[l])]
+    if len(entries) + len(rebuilds) * e_pad >= (L * e_pad) // 4:
+        return LevelTables(seg=jnp.asarray(th.seg), src=jnp.asarray(th.src),
+                           sign=jnp.asarray(th.sign),
+                           tile_of_block=jnp.asarray(th.tob),
+                           first_of_tile=jnp.asarray(th.fot),
+                           touched=jnp.asarray(th.touched))
+
+    seg, src, sign = t.seg, t.src, t.sign
+    tob, fot = t.tile_of_block, t.first_of_tile
+    if entries:
+        k = _bucket_count(len(entries))
+        entries += [entries[-1]] * (k - len(entries))
+        lvl = np.asarray([e[0] for e in entries], np.int32)
+        slot = np.asarray([e[1] for e in entries], np.int32)
+        seg, src, sign = _scatter_slot_patch(
+            seg, src, sign, jnp.asarray(lvl), jnp.asarray(slot),
+            jnp.asarray(th.seg[lvl, slot]), jnp.asarray(th.src[lvl, slot]),
+            jnp.asarray(th.sign[lvl, slot]))
+
+    if rebuilds:
+        lv = sorted(rebuilds)
+        k = min(_bucket_count(len(lv)), L)  # never pad past the level count
+        lv = np.asarray(lv + [lv[-1]] * (k - len(lv)), np.int32)
+        seg, src, sign, tob, fot = _scatter_level_rows(
+            seg, src, sign, tob, fot, jnp.asarray(lv),
+            jnp.asarray(th.seg[lv]), jnp.asarray(th.src[lv]),
+            jnp.asarray(th.sign[lv]), jnp.asarray(th.tob[lv]),
+            jnp.asarray(th.fot[lv]))
+
+    k = min(_bucket_count(len(changed_levels)), L)
+    lv = np.asarray(changed_levels
+                    + [changed_levels[-1]] * (k - len(changed_levels)),
+                    np.int32)
+    touched = _scatter_touched(t.touched, jnp.asarray(lv),
+                               jnp.asarray(th.touched[lv]))
+    return LevelTables(seg=seg, src=src, sign=sign, tile_of_block=tob,
+                       first_of_tile=fot, touched=touched)
 
 
 # --------------------------------------------------------------------- patch

@@ -229,6 +229,30 @@ def reset_window_rows(state: WindowState, rows) -> WindowState:
     )
 
 
+# ----------------------------------------------------------------- shard axis
+# Stacked (SPMD) execution keeps every shard's window state in one pytree
+# with a leading shard axis: values (S, n_writers, cap[, value_dim]), etc.
+# The per-shard helpers above all operate on axis 0 = writer rows, so a
+# stacked state is just the same NamedTuple vmapped/shard_mapped over axis 0.
+def stack_windows(states: list[WindowState]) -> WindowState:
+    """Stack aligned per-shard window states along a new leading shard axis."""
+    shapes = {tuple(x.shape for x in s) for s in states}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack misaligned window states: {shapes}")
+    return WindowState(*[jnp.stack(xs) for xs in zip(*states)])
+
+
+def window_shard(state: WindowState, s: int) -> WindowState:
+    """One shard's slice of a stacked window state."""
+    return WindowState(*[x[s] for x in state])
+
+
+def place_window_shard(state: WindowState, s: int,
+                       sub: WindowState) -> WindowState:
+    """Write one shard's (migrated) window state back into the stack."""
+    return WindowState(*[st.at[s].set(x) for st, x in zip(state, sub)])
+
+
 def live_mask(state: WindowState, spec: WindowSpec, now: jnp.ndarray | float) -> jnp.ndarray:
     """(n_writers, cap) bool — which ring slots are inside the window."""
     cap = spec.cap

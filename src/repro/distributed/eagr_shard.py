@@ -6,17 +6,23 @@ can be constructed for the readers assigned to that machine; the writes for
 each writer would be sent to all the machines where they are needed."
 
 Mapping to JAX/TPU:
-  * readers are hash-partitioned over the (pod, data) mesh axes,
+  * readers are hash-partitioned over the shard mesh axis,
   * each shard holds the *sub-overlay closure* of its readers (writers +
     partial aggregation nodes reachable backwards from its readers) as a
-    leveled CSR plan — plans differ per shard, so execution uses shard_map
-    with per-shard constants baked into one jitted program via a stacked,
-    padded plan representation,
+    leveled CSR plan, padded to one shared program shape
+    (``align_shard_plans``),
   * a write batch is relevant to every shard that consumes the writer: the
     batch is replicated (= the all-gather the paper describes; on TPU this is
     one small all-gather of the write ids/values, overlapped by XLA with the
     level-0 segment ops),
   * reads are shard-local (each reader lives on exactly one shard).
+
+This module owns the host-side machinery: partitioning, plan alignment,
+delta routing (``ShardedDynamic``), and the per-shard host loop helpers
+(``shard_write_batch`` / ``shard_read_batch``) kept as the parity and
+benchmark baseline. The production execution path is
+``distributed.stacked.StackedShardedEngine``: all shards stacked along a
+leading axis, one ``shard_map`` program, batch routing on-device.
 
 For realistic deployments the write batch (ids + values) is tiny compared to
 the partial-aggregate state, exactly as the paper argues.
@@ -36,6 +42,7 @@ from repro.core.engine import (
     ExecPlan,
     PlanPad,
     compile_plan,
+    grow_pad,
     measure_plan,
     plan_dims,
 )
@@ -67,7 +74,8 @@ class ShardedOverlay:
 
 
 def align_shard_plans(shards: list[Overlay], decisions: list[np.ndarray],
-                      *, backend: str | None = None) -> list[ExecPlan]:
+                      *, backend: str | None = None,
+                      headroom: float | None = None) -> list[ExecPlan]:
     """Compile every shard's plan padded to the element-wise maximum of all
     shard dimensions (nodes, writers, levels, edge blocks, demand slots).
 
@@ -75,17 +83,23 @@ def align_shard_plans(shards: list[Overlay], decisions: list[np.ndarray],
     per-shard write/read bodies hit a single jitted program — the shard axis
     can then be a stacked leading dimension under ``shard_map`` instead of
     n_shards separately-compiled programs. Dims come from the host-side
-    ``measure_plan`` pass, so each plan's tables are built exactly once."""
+    ``measure_plan`` pass, so each plan's tables are built exactly once.
+    ``headroom`` grows the shared pad (as ``EagrEngine(headroom=...)``) so
+    structural churn patches every shard in place instead of forcing a
+    stack-wide realignment on the first slot overflow."""
     dims = [measure_plan(s, d) for s, d in zip(shards, decisions)]
     pad = PlanPad(**{f: max(getattr(d, f) for d in dims)
                      for f in PlanPad.__dataclass_fields__})
+    if headroom and headroom > 1.0:
+        pad = grow_pad(pad, headroom)
     return [compile_plan(s, d, backend=backend, pad=pad)
             for s, d in zip(shards, decisions)]
 
 
 def partition_overlay(overlay: Overlay, decisions: np.ndarray,
                       n_shards: int, seed: int = 0, *,
-                      backend: str | None = None) -> ShardedOverlay:
+                      backend: str | None = None,
+                      headroom: float | None = None) -> ShardedOverlay:
     """Hash-partition readers; carve each shard's backward closure."""
     rng = np.random.default_rng(seed)
     readers = overlay.reader_nodes()
@@ -134,7 +148,8 @@ def partition_overlay(overlay: Overlay, decisions: np.ndarray,
         shard_decs.append(_project_decisions(overlay, decisions, sub))
     # One padded plan shape for all shards: execution shares a single
     # compiled program over the unified substrate (paper §7 on one machine).
-    plans = align_shard_plans(shards, shard_decs, backend=backend)
+    plans = align_shard_plans(shards, shard_decs, backend=backend,
+                              headroom=headroom)
     writer_rows = [plan.writer_row_of_base for plan in plans]
     return ShardedOverlay(shards=shards, shard_decisions=shard_decs,
                           reader_shard=reader_shard, shard_plans=plans,
@@ -181,10 +196,14 @@ class ShardedDynamic:
     with growth headroom, the remaining shards are recompiled to the same
     padded shape so execution stays on one compiled program."""
 
-    def __init__(self, sharded: ShardedOverlay, engines: list | None = None,
+    def __init__(self, sharded: ShardedOverlay, engines=None,
                  *, growth: float = 2.0):
+        from repro.distributed.stacked import StackedShardedEngine
+
         self.sharded = sharded
-        self.engines = engines
+        self.stacked = engines if isinstance(engines, StackedShardedEngine) \
+            else None
+        self.engines = None if self.stacked is not None else engines
         self.growth = growth
         self.dynamics: list[DynamicOverlay] = []
         for sub in sharded.shards:
@@ -193,18 +212,26 @@ class ShardedDynamic:
             self.dynamics.append(DynamicOverlay.from_overlay(sub, ris))
 
     # --------------------------------------------------------------- routing
-    def _owner(self, reader: int) -> int:
+    def _owner(self, reader: int, *, allow_new: bool = False) -> int:
         s = self.sharded.reader_shard.get(int(reader))
-        if s is None:  # new reader: deterministic assignment
+        if s is None:
+            if not allow_new:
+                raise ValueError(
+                    f"base id {int(reader)} is owned by no shard — register "
+                    f"it through add_node() before routing mutations to it")
+            # genuinely new reader: deterministic assignment
             s = int(reader) % self.sharded.n_shards
             self.sharded.reader_shard[int(reader)] = s
         return s
 
-    def route(self, affected: dict[int, set[int]]) -> dict[int, dict[int, set[int]]]:
-        """Split one {reader: delta_writers} map by owning shard."""
+    def route(self, affected: dict[int, set[int]], *,
+              allow_new: bool = False) -> dict[int, dict[int, set[int]]]:
+        """Split one {reader: delta_writers} map by owning shard. Unknown
+        readers raise unless ``allow_new`` (the add_node path) is set."""
         per_shard: dict[int, dict[int, set[int]]] = {}
         for r, delta in affected.items():
-            per_shard.setdefault(self._owner(r), {})[r] = set(delta)
+            per_shard.setdefault(self._owner(r, allow_new=allow_new),
+                                 {})[r] = set(delta)
         return per_shard
 
     def add_edge(self, u: int, v: int,
@@ -224,12 +251,13 @@ class ShardedDynamic:
         # other shards start u's window empty when a reader there follows u
         # later — cross-shard window backfill on new subscriptions is a known
         # gap (would need a state transfer, see ROADMAP).
-        self.dynamics[self._owner(u)].b.add_writer(u)
+        home = self._owner(u, allow_new=True)
+        self.dynamics[home].b.add_writer(u)
         for s, aff in self.route({r: {u} for r in out_readers}).items():
             for r, delta in aff.items():
                 self.dynamics[s].add_reader_inputs(r, delta)
         if in_neighbors:
-            self.dynamics[self._owner(u)].add_reader_inputs(u, set(in_neighbors))
+            self.dynamics[home].add_reader_inputs(u, set(in_neighbors))
 
     def delete_node(self, u: int) -> None:
         for s, dyn in enumerate(self.dynamics):
@@ -241,7 +269,9 @@ class ShardedDynamic:
     def apply(self) -> list:
         """Drain every shard's delta and patch the owning plans, then restore
         the one-program-shape invariant. Returns per-shard ``PatchResult``
-        (None for untouched shards)."""
+        (None for untouched shards). With a ``StackedShardedEngine`` each
+        in-capacity patch swaps exactly one slice of the stacked pytree; any
+        growth fallback realigns every shard and restacks the whole stack."""
         from repro.core.plan_patch import patch_plan
 
         results = []
@@ -250,7 +280,9 @@ class ShardedDynamic:
             if delta.empty:
                 results.append(None)
                 continue
-            if self.engines is not None:
+            if self.stacked is not None:
+                res = self.stacked.apply_delta(s, delta, growth=self.growth)
+            elif self.engines is not None:
                 res = self.engines[s].apply_delta(delta, growth=self.growth)
                 self.sharded.shard_plans[s] = self.engines[s].plan
             else:
@@ -261,6 +293,10 @@ class ShardedDynamic:
             self.sharded.writer_rows[s] = res.plan.writer_row_of_base
             results.append(res)
         self.ensure_aligned()
+        # in-capacity patches refreshed their own slice + owner maps inside
+        # apply_delta; only a growth fallback leaves the stack to re-adopt
+        if self.stacked is not None and self.stacked._needs_restack:
+            self.stacked.restack()
         return results
 
     def ensure_aligned(self) -> bool:
@@ -292,46 +328,87 @@ class ShardedDynamic:
             new.patches_applied = p.patches_applied
             if self.engines is not None:
                 self.engines[s].adopt_plan(new)
+            # a stacked engine re-adopts every slice at once via restack()
+            if self.stacked is not None:
+                self.stacked._needs_restack = True
             plans[s] = new
             self.sharded.writer_rows[s] = new.writer_row_of_base
         return True
 
 
+def host_loop_write(sharded: ShardedOverlay, engines: list,
+                    base_ids: np.ndarray, values: np.ndarray) -> None:
+    """The pre-stacking execution path, one jitted dispatch per shard — kept
+    as the parity/benchmark baseline the stacked program must match bit for
+    bit. ``engines`` are per-shard ``EagrEngine``s over the aligned plans."""
+    for eng, (rows, v, m) in zip(engines,
+                                 shard_write_batch(sharded, base_ids, values)):
+        eng.state = eng._write(eng.state, jnp.asarray(rows),
+                               jnp.asarray(v), jnp.asarray(m))
+        eng._now_host += 1
+
+
+def host_loop_read(sharded: ShardedOverlay, engines: list,
+                   base_ids: np.ndarray) -> np.ndarray:
+    """Per-shard host loop read, gathered host-side (each lane is owned by
+    exactly one shard, so the masked sum is a gather)."""
+    acc = None
+    for eng, (nodes, m) in zip(engines, shard_read_batch(sharded, base_ids)):
+        ans, _ = eng._read(eng.state, jnp.asarray(nodes), jnp.asarray(m))
+        ans = np.asarray(ans)
+        part = np.where(m.reshape(m.shape + (1,) * (ans.ndim - 1)), ans, 0)
+        acc = part if acc is None else acc + part
+    return acc
+
+
 def shard_write_batch(sharded: ShardedOverlay, base_ids: np.ndarray,
                       values: np.ndarray):
     """Route one global write batch to every shard that consumes the writer
-    (host-side; the device-side equivalent is the all-gather of the batch).
-    Returns per-shard (rows, vals, mask) padded to the global batch size."""
+    (host-side; the device-side equivalent is ``StackedShardedEngine``'s
+    all-gather + owner-map mask). Returns per-shard (rows, vals, mask) in
+    *batch-lane order* — lane i stays lane i with ``mask[i]`` flagging
+    ownership — so the host loop computes bit-identically to the stacked
+    program, which sees the same masked layout."""
     B = len(base_ids)
+    vals = np.asarray(values, np.float32)
     out = []
     for s in range(sharded.n_shards):
         rows = np.zeros(B, np.int32)
-        vals = np.zeros(B, np.float32)
         mask = np.zeros(B, bool)
         wr = sharded.writer_rows[s]
-        j = 0
-        for b, v in zip(base_ids, values):
+        for i, b in enumerate(base_ids):
             row = wr.get(int(b))
             if row is not None:
-                rows[j], vals[j], mask[j] = row, v, True
-                j += 1
+                rows[i], mask[i] = row, True
         out.append((rows, vals, mask))
     return out
 
 
 def shard_read_batch(sharded: ShardedOverlay, base_ids: np.ndarray):
-    """Route reads to their unique owner shard (padded per shard)."""
+    """Route reads to their unique owner shard, in batch-lane order (lane i
+    answers base_ids[i] on the owning shard; mask elsewhere). A base id owned
+    by no shard has no answer anywhere — raise instead of silently returning
+    a masked lane."""
+    def _unowned(b: int) -> bool:
+        s = sharded.reader_shard.get(b)
+        # a shard assignment without a compiled reader node (e.g. a pure
+        # writer registered via add_node, or a pending delta) is unreadable
+        return s is None or b not in sharded.shard_plans[s].reader_node_of_base
+
+    unknown = [int(b) for b in base_ids if _unowned(int(b))]
+    if unknown:
+        raise ValueError(
+            f"shard_read_batch: base ids {sorted(set(unknown))[:8]} are "
+            f"owned by no shard (not readers of any shard overlay)")
     B = len(base_ids)
     out = []
     for s in range(sharded.n_shards):
         nodes = np.zeros(B, np.int32)
         mask = np.zeros(B, bool)
         plan = sharded.shard_plans[s]
-        j = 0
-        for b in base_ids:
+        for i, b in enumerate(base_ids):
             if sharded.reader_shard.get(int(b)) == s:
-                nodes[j] = plan.reader_node_of_base[int(b)]
-                mask[j] = True
-                j += 1
+                nodes[i] = plan.reader_node_of_base[int(b)]
+                mask[i] = True
         out.append((nodes, mask))
     return out

@@ -1,0 +1,377 @@
+"""Stacked SPMD execution of reader-partitioned EAGr shards (paper §7).
+
+``eagr_shard.partition_overlay`` + ``align_shard_plans`` already force every
+shard's ``ExecPlan`` onto one ``PlanMeta`` and identical array shapes. This
+module takes the remaining step: all shards' ``PlanArrays``, window state and
+PAOs are stacked along a leading shard axis and write/read run as **one**
+compiled program over a device mesh —
+
+  * the incoming batch is split into per-shard chunks and **all-gathered
+    on-device** (the write replication the paper describes),
+  * each shard masks the gathered batch to its owned writer rows through a
+    device-resident owner map (base id -> local writer row, -1 elsewhere),
+  * reads run shard-local and the per-shard answers come back with a single
+    ``psum`` collective (each reader lives on exactly one shard, so the sum
+    over shards is a gather).
+
+The per-shard body is the *pure* engine step (``engine.write_step_sum`` /
+``write_step_extremal`` / ``read_step``) — identical math to the per-shard
+host loop, which stays in ``eagr_shard`` as the parity / benchmark baseline.
+On a mesh of >= n_shards devices the body runs under ``shard_map``; with
+fewer devices (CPU tier-1) the same body runs under
+``vmap(axis_name=SHARD_AXIS)``, so both paths trace the same collectives.
+
+What stays host-side: delta journaling (``ShardedDynamic``), plan patching
+(one slice of the stacked pytree per shard delta), and owner-map rebuilds
+after structural churn.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregates import Aggregate
+from repro.core.engine import (
+    EngineState,
+    _refresh_pao,
+    place_plan_arrays,
+    plan_arrays_shard,
+    read_step,
+    stack_plan_arrays,
+    write_step_extremal,
+    write_step_sum,
+)
+from repro.core.window import (
+    WindowSpec,
+    init_windows,
+    pad_window_rows,
+    place_window_shard,
+    reset_window_rows,
+    stack_windows,
+    window_shard,
+)
+from repro.launch.mesh import SHARD_AXIS, make_shard_mesh
+
+BASE_BUCKET = 256  # owner maps grow in power-of-two multiples of this
+
+
+def _bucket_base_cap(n: int) -> int:
+    """Owner-map capacity bucket: power-of-two multiples of BASE_BUCKET so a
+    growing base-id space rarely changes the stacked program's input shapes."""
+    k = -(-max(1, n) // BASE_BUCKET)
+    return BASE_BUCKET * (1 << (k - 1).bit_length())
+
+
+def _run_stacked(mesh, body, args):
+    """Run the per-shard ``body`` over every leading-axis slice of ``args`` —
+    under ``shard_map`` on a real shard mesh, else under ``vmap`` with the
+    same axis name so the body's collectives mean the same thing."""
+    if mesh is None:
+        return jax.vmap(body, axis_name=SHARD_AXIS)(*args)
+
+    def dev_body(*dev_args):
+        # one shard per device: peel the local (length-1) shard axis so the
+        # body is written once for both execution paths
+        out = body(*jax.tree.map(lambda x: x[0], dev_args))
+        return jax.tree.map(lambda x: x[None], out)
+
+    specs = jax.tree.map(lambda _: P(SHARD_AXIS), args)
+    return shard_map(dev_body, mesh=mesh, in_specs=specs,
+                     out_specs=P(SHARD_AXIS), check_rep=False)(*args)
+
+
+# ------------------------------------------------------------- jit programs
+# One jitted program per (meta, agg, spec, mesh) for the WHOLE stack — the
+# trace-count tests assert N-shard execution compiles exactly once.
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _stacked_write_sum(meta, agg, spec, mesh, arrays, state, wmap,
+                       ids, vals, valid):
+    def body(arrays, state, wmap, ids_c, vals_c, valid_c):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        vals = lax.all_gather(vals_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        rows = wmap[jnp.clip(ids, 0, wmap.shape[0] - 1)]
+        mask = valid & (rows >= 0)
+        return write_step_sum(meta, agg, spec, arrays, state,
+                              jnp.maximum(rows, 0), vals, mask)
+
+    return _run_stacked(mesh, body, (arrays, state, wmap, ids, vals, valid))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _stacked_write_extremal(meta, agg, spec, mesh, arrays, state, wmap,
+                            ids, vals, valid, prev_now):
+    def body(arrays, state, wmap, ids_c, vals_c, valid_c, prev):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        vals = lax.all_gather(vals_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        rows = wmap[jnp.clip(ids, 0, wmap.shape[0] - 1)]
+        mask = valid & (rows >= 0)
+        return write_step_extremal(meta, agg, spec, arrays, state,
+                                   jnp.maximum(rows, 0), vals, mask, prev)
+
+    return _run_stacked(mesh, body,
+                        (arrays, state, wmap, ids, vals, valid, prev_now))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _stacked_read(meta, agg, mesh, arrays, state, rmap, ids, valid):
+    def body(arrays, state, rmap, ids_c, valid_c):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        nodes = rmap[jnp.clip(ids, 0, rmap.shape[0] - 1)]
+        own = valid & (nodes >= 0)
+        ans, _ = read_step(meta, agg, arrays, state,
+                           jnp.maximum(nodes, 0), own)
+        ownb = own.reshape(own.shape + (1,) * (ans.ndim - own.ndim))
+        # every reader is owned by exactly one shard, so the cross-shard sum
+        # of masked answers IS the gather of per-shard results
+        return lax.psum(jnp.where(ownb, ans, jnp.zeros_like(ans)), SHARD_AXIS)
+
+    out = _run_stacked(mesh, body, (arrays, state, rmap, ids, valid))
+    return out[0]  # replicated across the shard axis
+
+
+# ----------------------------------------------------------------------- API
+class StackedShardedEngine:
+    """N reader-partitioned shards, one jit trace, one device program.
+
+    Owns the stacked runtime state of a ``ShardedOverlay`` whose plans were
+    aligned by ``align_shard_plans``:
+
+      arrays   PlanArrays pytree, every leaf (S, ...)
+      state    EngineState — windows (S, n_writers, cap), pao (S, n_nodes, d),
+               now (S,)
+      maps     writer_map / reader_map (S, base_cap) int32, -1 = not owned
+
+    ``write_batch`` / ``read_batch`` take *global* batches of base ids —
+    routing happens on-device (all-gather + owner-map mask), replacing the
+    host-side ``shard_write_batch`` / ``shard_read_batch`` scatter. Structural
+    churn patches one shard slice at a time (``apply_delta``); a growth
+    fallback on any shard triggers a stack-wide realign + ``restack``.
+    """
+
+    def __init__(self, sharded, aggregate: Aggregate,
+                 window: WindowSpec | None = None, *,
+                 mesh: "str | object | None" = "auto",
+                 base_capacity: int | None = None):
+        metas = {p.meta for p in sharded.shard_plans}
+        if len(metas) != 1:
+            raise ValueError(
+                "shard plans are not aligned to one PlanMeta — build the "
+                f"ShardedOverlay through align_shard_plans (got {metas})")
+        self.sharded = sharded
+        self.agg = aggregate
+        self.spec = window or WindowSpec(kind="tuple", size=1)
+        self.meta = sharded.shard_plans[0].meta
+        self.n_shards = sharded.n_shards
+        self.mesh = make_shard_mesh(self.n_shards) if mesh == "auto" else mesh
+        self.arrays = self._commit(stack_plan_arrays(
+            [p.arrays for p in sharded.shard_plans]))
+        self.state = self._commit(self.init_state())
+        self._base_cap = _bucket_base_cap(base_capacity or 1)
+        self._reader_owner: dict[int, int] = {}
+        self._pending_retired: dict[int, list[int]] = {}
+        self._needs_restack = False
+        # host-side clocks mirror EagrEngine's; `now` advances in lockstep
+        # (every global batch runs on every shard) but the last PAO-eval
+        # instant is PER SHARD — a slice patch refreshes one shard's PAOs
+        # without touching its siblings' expiry recompute windows
+        self._now_host = 0.0
+        self._last_eval_now = np.zeros(self.n_shards, np.float32)
+        self.refresh_owner_maps()
+
+    # ------------------------------------------------------------------ state
+    def _commit(self, tree):
+        """Pin every stacked leaf to the canonical shard-axis sharding. Host-
+        side mutations (slice patches, owner-map rebuilds) otherwise leave
+        arrays with ad-hoc shardings, and jit keys its cache on input
+        shardings — committing keeps the stack on ONE compiled program."""
+        if self.mesh is None:
+            return tree
+        sh = jax.sharding.NamedSharding(self.mesh, P(SHARD_AXIS))
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def init_state(self) -> EngineState:
+        windows = stack_windows(
+            [init_windows(self.meta.n_writers, self.spec)
+             for _ in range(self.n_shards)])
+        pao = jnp.stack([self.agg.init_pao(self.meta.n_nodes)
+                         for _ in range(self.n_shards)])
+        return EngineState(windows, pao, jnp.zeros((self.n_shards,),
+                                                   jnp.float32))
+
+    def refresh_owner_maps(self) -> None:
+        """Rebuild the device-resident base-id routing maps from the host
+        plans (after construction and after structural churn). Capacity grows
+        in buckets so the stacked programs keep their traced shapes."""
+        plans = self.sharded.shard_plans
+        top = 0
+        for p in plans:
+            for m in (p.writer_row_of_base, p.reader_node_of_base):
+                if m:
+                    top = max(top, max(m) + 1)
+        self._base_cap = max(self._base_cap, _bucket_base_cap(top))
+        wmap = np.full((self.n_shards, self._base_cap), -1, np.int32)
+        rmap = np.full((self.n_shards, self._base_cap), -1, np.int32)
+        self._reader_owner = {}
+        for s, p in enumerate(plans):
+            for b, row in p.writer_row_of_base.items():
+                wmap[s, b] = row
+            for b, node in p.reader_node_of_base.items():
+                rmap[s, b] = node
+                self._reader_owner[int(b)] = s
+        self.writer_map = self._commit(jnp.asarray(wmap))
+        self.reader_map = self._commit(jnp.asarray(rmap))
+
+    def _chunk(self, ids: np.ndarray, vals: np.ndarray | None,
+               batch_size: int | None):
+        """Pad a global batch to a multiple of n_shards and split it into the
+        per-shard chunks the on-device all-gather reassembles."""
+        B = batch_size or max(1, len(ids))
+        if B < len(ids):
+            raise ValueError(f"batch_size={B} < batch of {len(ids)}")
+        S = self.n_shards
+        Bp = -(-B // S) * S
+        idp = np.zeros(Bp, np.int32)
+        idp[: len(ids)] = ids
+        valid = np.zeros(Bp, bool)
+        # ids outside the owner maps' range are owned by no shard (the
+        # device-side clip would otherwise alias them onto base id 0)
+        valid[: len(ids)] = (ids >= 0) & (ids < self._base_cap)
+        out = [jnp.asarray(idp.reshape(S, -1)),
+               jnp.asarray(valid.reshape(S, -1))]
+        if vals is not None:
+            vp = np.zeros((Bp,) + vals.shape[1:], np.float32)
+            vp[: len(ids)] = vals
+            out.append(jnp.asarray(vp.reshape((S, -1) + vals.shape[1:])))
+        return out
+
+    # -------------------------------------------------------------- execution
+    def write_batch(self, base_ids: np.ndarray, values: np.ndarray,
+                    batch_size: int | None = None) -> None:
+        """Apply one *global* write batch. Every shard sees the whole batch
+        (the paper's write replication) and keeps the writes it consumes;
+        writes owned by no shard are dropped on-device, like the single
+        engine drops writes that feed no reader."""
+        base_ids = np.asarray(base_ids)
+        values = np.asarray(values, np.float32)
+        ids, valid, vals = self._chunk(base_ids, values, batch_size)
+        if self.agg.combine == "sum":
+            self.state = _stacked_write_sum(
+                self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                self.state, self.writer_map, ids, vals, valid)
+        else:
+            # unlike EagrEngine there is no all-dropped-batch skip (a global
+            # batch always dispatches), so no expiry-deadline bookkeeping —
+            # only the per-shard prev-eval clocks the touched-writer
+            # restriction needs. _last_eval_now is treated as immutable and
+            # REBOUND, never mutated: jnp.asarray may zero-copy alias the
+            # numpy buffer, and an in-place write would race the async
+            # dispatch reading it
+            prev = jnp.asarray(self._last_eval_now)
+            self._last_eval_now = np.full(self.n_shards, self._now_host,
+                                          np.float32)
+            self.state = _stacked_write_extremal(
+                self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                self.state, self.writer_map, ids, vals, valid, prev)
+        self._now_host += 1.0
+
+    def read_batch(self, base_ids: np.ndarray,
+                   batch_size: int | None = None) -> np.ndarray:
+        """Answer one global read batch: shard-local pull sweeps, one psum to
+        gather the per-shard answers. Raises for base ids no shard owns."""
+        base_ids = np.asarray(base_ids)
+        unknown = [int(b) for b in base_ids
+                   if int(b) not in self._reader_owner]
+        if unknown:
+            raise ValueError(
+                f"read_batch: base ids {sorted(set(unknown))[:8]} are owned "
+                f"by no shard (not readers of any shard overlay)")
+        ids, valid = self._chunk(base_ids, None, batch_size)
+        ans = _stacked_read(self.meta, self.agg, self.mesh, self.arrays,
+                            self.state, self.reader_map, ids, valid)
+        return np.asarray(jax.device_get(ans))[: len(base_ids)]
+
+    # ----------------------------------------------------- structural updates
+    def apply_delta(self, s: int, delta, *, growth: float = 2.0):
+        """Patch shard ``s``'s plan (§3.3) and, when the patch stayed within
+        capacity, swap exactly that slice of the stacked pytree — the other
+        shards' tables, windows and PAOs are untouched and every stacked
+        program keeps its trace. A growth fallback defers to ``restack``."""
+        from repro.core.plan_patch import patch_plan
+
+        plan = self.sharded.shard_plans[s]
+        res = patch_plan(plan, delta, overlay=self.sharded.shards[s],
+                         growth=growth)
+        if res.reason == "empty delta":
+            return res
+        self.sharded.shard_plans[s] = res.plan
+        self.sharded.writer_rows[s] = res.plan.writer_row_of_base
+        if res.recompiled:
+            # shapes moved: the caller realigns every shard to the new padded
+            # dims (ShardedDynamic.ensure_aligned) and then restacks
+            self._pending_retired[s] = list(res.retired_writer_rows)
+            self._needs_restack = True
+            return res
+        self.arrays = self._commit(
+            place_plan_arrays(self.arrays, s, res.plan.arrays))
+        self._refresh_shard_state(s, res.retired_writer_rows)
+        self.refresh_owner_maps()  # the patch may have moved base-id maps
+        return res
+
+    def _refresh_shard_state(self, s: int, retired_rows) -> None:
+        """Migrate one shard's window/PAO slice after an in-capacity patch:
+        retired writer rows are zeroed and the slice's PAOs repaired by the
+        same cached ``_refresh_pao`` program single engines use."""
+        win_s = window_shard(self.state.windows, s)
+        if retired_rows:
+            win_s = reset_window_rows(win_s, retired_rows)
+        pao_s = _refresh_pao(self.meta, self.agg, self.spec,
+                             plan_arrays_shard(self.arrays, s), win_s,
+                             self.state.now[s])
+        self.state = self._commit(EngineState(
+            place_window_shard(self.state.windows, s, win_s),
+            self.state.pao.at[s].set(pao_s),
+            self.state.now))
+        # only THIS shard's PAOs were just evaluated — its siblings keep
+        # their own last-eval instants (and with them their expiry windows);
+        # rebind rather than mutate (the old buffer may back a live jnp alias)
+        lev = self._last_eval_now.copy()
+        lev[s] = self._now_host
+        self._last_eval_now = lev
+
+    def restack(self) -> None:
+        """Re-adopt every shard plan after a stack-wide realignment (a growth
+        fallback on any shard): new meta, re-stacked arrays, window rows
+        padded per shard, all PAO slices refreshed, owner maps rebuilt."""
+        plans = self.sharded.shard_plans
+        metas = {p.meta for p in plans}
+        if len(metas) != 1:
+            raise ValueError(f"restack on misaligned shard plans: {metas}")
+        self.meta = plans[0].meta
+        self.arrays = self._commit(stack_plan_arrays([p.arrays for p in plans]))
+        wins, paos = [], []
+        for s in range(self.n_shards):
+            w = pad_window_rows(window_shard(self.state.windows, s),
+                                self.meta.n_writers)
+            retired = self._pending_retired.pop(s, None)
+            if retired:
+                w = reset_window_rows(w, retired)
+            wins.append(w)
+            paos.append(_refresh_pao(self.meta, self.agg, self.spec,
+                                     plan_arrays_shard(self.arrays, s), w,
+                                     self.state.now[s]))
+        self.state = self._commit(EngineState(stack_windows(wins),
+                                              jnp.stack(paos),
+                                              self.state.now))
+        self._last_eval_now = np.full(self.n_shards, self._now_host,
+                                      np.float32)
+        self._needs_restack = False
+        self.refresh_owner_maps()

@@ -22,3 +22,22 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names — lets the same sharded
     step functions run on the local CPU for smoke tests and examples."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+SHARD_AXIS = "shard"
+
+
+def make_shard_mesh(n_shards: int) -> jax.sharding.Mesh | None:
+    """1-D mesh of ``n_shards`` devices along the EAGr shard axis, for the
+    stacked ``shard_map`` execution of reader-partitioned overlays.
+
+    Returns None when fewer than ``n_shards`` devices are available — the
+    stacked engine then runs the identical per-shard body under
+    ``vmap(axis_name=SHARD_AXIS)``, so CPU tier-1 tests and the
+    ``--xla_force_host_platform_device_count`` CI mesh exercise one code path.
+    """
+    devices = jax.devices()
+    if n_shards > len(devices):
+        return None
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices[:n_shards]), (SHARD_AXIS,))

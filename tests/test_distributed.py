@@ -1,6 +1,6 @@
 """Distributed substrate: checkpoint/restart, fault injection + replay
 determinism, straggler detection, gradient compression, reader-partitioned
-EAGr shards."""
+EAGr shards (per-shard host loop AND the stacked shard_map engine)."""
 import functools
 
 import jax
@@ -12,6 +12,7 @@ from conftest import make_freqs
 from repro.core import dataflow as D
 from repro.core.aggregates import make_aggregate
 from repro.core.bipartite import build_bipartite
+from repro.core.dynamic import DynamicOverlay
 from repro.core.engine import EagrEngine, compile_plan
 from repro.core.vnm import construct_vnm
 from repro.core.window import WindowSpec
@@ -23,9 +24,16 @@ from repro.distributed.compression import (
     quantize_int8,
 )
 from repro.distributed.eagr_shard import (
+    ShardedDynamic,
+    host_loop_read,
+    host_loop_write,
     partition_overlay,
     shard_read_batch,
-    shard_write_batch,
+)
+from repro.distributed.stacked import (
+    StackedShardedEngine,
+    _stacked_read,
+    _stacked_write_sum,
 )
 from repro.distributed.fault import FaultTolerantRunner, StragglerDetector
 from repro.graphs.generators import rmat_graph
@@ -172,20 +180,28 @@ def test_compressed_training_converges():
 
 
 # ------------------------------------------------------------ EAGr sharding
-def test_reader_partitioned_shards_match_global_engine():
-    g = rmat_graph(200, 1200, seed=9)
+def _eagr_sharded_system(n=200, e=1200, seed=9, n_shards=4, part_seed=0,
+                         headroom=None):
+    g = rmat_graph(n, e, seed=seed)
     bp = build_bipartite(g)
     ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
-    wf, rf = make_freqs(g.n_nodes, seed=9)
+    wf, rf = make_freqs(g.n_nodes, seed=seed)
     dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    sharded = partition_overlay(ov, dec, n_shards=n_shards, seed=part_seed,
+                                headroom=headroom)
+    return g, bp, ov, dec, sharded
+
+
+def test_reader_partitioned_shards_match_global_engine():
+    g, bp, ov, dec, sharded = _eagr_sharded_system()
     agg = make_aggregate("sum")
     spec = WindowSpec("tuple", 4)
 
     global_eng = EagrEngine(ov, dec, agg, spec)
-    sharded = partition_overlay(ov, dec, n_shards=4, seed=0)
     assert sharded.replication_factor() >= 1.0
-    engines = [EagrEngine(s, d, agg, spec)
-               for s, d in zip(sharded.shards, sharded.shard_decisions)]
+    engines = [EagrEngine(s, d, agg, spec, plan=p)
+               for s, d, p in zip(sharded.shards, sharded.shard_decisions,
+                                  sharded.shard_plans)]
 
     rng = np.random.default_rng(10)
     ris = bp.reader_input_sets()
@@ -193,28 +209,12 @@ def test_reader_partitioned_shards_match_global_engine():
         ids = rng.choice(bp.writers, 64)
         vals = rng.normal(size=64).astype(np.float32)
         global_eng.write_batch(ids, vals)
-        # paper §7: each write goes to every shard that consumes the writer
-        for eng, (rows, v, m) in zip(engines,
-                                     shard_write_batch(sharded, ids, vals)):
-            sel = m.nonzero()[0]
-            if sel.size:
-                base_ids = [k for k in eng.plan.writer_row_of_base]  # noqa: F841
-                # rows are already local rows; write directly through state
-                eng.state = eng._write(eng.state, jnp.asarray(rows),
-                                       jnp.asarray(v), jnp.asarray(m))
+        host_loop_write(sharded, engines, ids, vals)
 
     readers = rng.choice(list(ris.keys()), 24)
     want = np.ravel(global_eng.read_batch(readers))
-    for eng, (nodes, m) in zip(engines, shard_read_batch(sharded, readers)):
-        if not m.any():
-            continue
-        ans, _ = eng._read(eng.state, jnp.asarray(nodes), jnp.asarray(m))
-        ans = np.ravel(np.asarray(ans))[: int(m.sum())]
-        owned = [r for r in readers if sharded.reader_shard.get(int(r)) ==
-                 engines.index(eng)]
-        for a, r in zip(ans, owned):
-            idx = list(readers).index(r)
-            np.testing.assert_allclose(a, want[idx], rtol=1e-4, atol=1e-4)
+    got = np.ravel(host_loop_read(sharded, engines, readers))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 def test_shard_partition_covers_all_readers():
@@ -228,3 +228,259 @@ def test_shard_partition_covers_all_readers():
     assert set(sharded.reader_shard.keys()) == all_readers
     for s, eng_ov in enumerate(sharded.shards):
         eng_ov.toposort()  # each shard closure is a valid DAG
+
+
+# --------------------------------------------------- stacked shard_map engine
+def test_stacked_engine_bit_identical_to_host_loop():
+    """One shard_map/vmap program over the stacked plans must equal the
+    per-shard host loop lane for lane — same bodies, same masked layout."""
+    g, bp, ov, dec, sharded = _eagr_sharded_system()
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 4)
+    stacked = StackedShardedEngine(sharded, agg, spec)
+    engines = [EagrEngine(s, d, agg, spec, plan=p)
+               for s, d, p in zip(sharded.shards, sharded.shard_decisions,
+                                  sharded.shard_plans)]
+    rng = np.random.default_rng(10)
+    ris = bp.reader_input_sets()
+    for _ in range(4):
+        ids = rng.choice(bp.writers, 64)
+        vals = rng.normal(size=64).astype(np.float32)
+        stacked.write_batch(ids, vals, batch_size=64)
+        host_loop_write(sharded, engines, ids, vals)
+
+    readers = rng.choice(list(ris.keys()), 24)
+    want = host_loop_read(sharded, engines, readers)
+    got = stacked.read_batch(readers, batch_size=24)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_stacked_engine_extremal_matches_global():
+    g, bp, ov, dec, sharded = _eagr_sharded_system(seed=11)
+    agg = make_aggregate("max")
+    spec = WindowSpec("tuple", 3)
+    global_eng = EagrEngine(ov, dec, agg, spec)
+    stacked = StackedShardedEngine(sharded, agg, spec)
+    rng = np.random.default_rng(2)
+    ris = bp.reader_input_sets()
+    for _ in range(3):
+        ids = rng.choice(bp.writers, 48)
+        vals = rng.normal(size=48).astype(np.float32)
+        global_eng.write_batch(ids, vals, batch_size=48)
+        stacked.write_batch(ids, vals, batch_size=48)
+    readers = rng.choice(list(ris.keys()), 16)
+    want = np.ravel(global_eng.read_batch(readers, batch_size=16))
+    got = np.ravel(stacked.read_batch(readers, batch_size=16))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def _stacked_oracle_read(stacked, sd, r):
+    """Ground truth straight from the owning shard's writer windows — the
+    single-engine ``oracle_read`` applied to the stacked deployment. (The
+    global engine is NOT the oracle under churn: a newly subscribed shard
+    starts the writer's window empty — the documented backfill gap.)"""
+    from repro.core.window import window_pao, window_shard
+
+    s = stacked.sharded.reader_shard[int(r)]
+    plan = stacked.sharded.shard_plans[s]
+    win = window_shard(stacked.state.windows, s)
+    wp = np.asarray(jax.device_get(
+        window_pao(win, stacked.spec, stacked.agg,
+                   now=stacked.state.now[s])))
+    count = np.asarray(jax.device_get(win.count))
+    acc = stacked.agg.INITIALIZE()
+    for w in sd.dynamics[s].reader_inputs[int(r)]:
+        row = plan.writer_row_of_base[w]
+        if not count[row]:
+            continue
+        if stacked.agg.combine == "sum":
+            acc = acc + wp[row]
+        elif stacked.agg.combine == "max":
+            acc = np.maximum(acc, wp[row])
+        else:
+            acc = np.minimum(acc, wp[row])
+    return stacked.agg.FINALIZE(acc)
+
+
+def test_stacked_single_program_under_churn():
+    """N-shard execution compiles exactly ONE write and ONE read program, and
+    in-capacity structural churn through ShardedDynamic keeps both traces
+    (the stacked analogue of test_plan_patch's zero-retrace invariant)."""
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=3,
+                                                   headroom=2.0)
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 4)
+    stacked = StackedShardedEngine(sharded, agg, spec, base_capacity=2048)
+    geng = EagrEngine(ov, dec, agg, spec)
+    gdyn = DynamicOverlay.from_overlay(ov, bp.reader_input_sets())
+    # rebase the global engine onto the unpruned export so deltas align
+    ov0 = gdyn.to_overlay(prune=False)
+    geng = EagrEngine(ov0, geng.plan.decision, agg, spec, headroom=2.0)
+
+    rng = np.random.default_rng(1)
+    ris = bp.reader_input_sets()
+    readers = np.array(list(ris))
+
+    def both_write():
+        ids = rng.choice(bp.writers, 64)
+        vals = rng.normal(size=64).astype(np.float32)
+        stacked.write_batch(ids, vals, batch_size=64)
+        geng.write_batch(ids, vals, batch_size=64)
+
+    both_write()
+    stacked.read_batch(rng.choice(readers, 16), batch_size=16)
+    w0, r0 = _stacked_write_sum._cache_size(), _stacked_read._cache_size()
+
+    sd = ShardedDynamic(sharded, stacked)
+    recompiles = 0
+    for _ in range(10):
+        u, r = int(rng.integers(0, 150)), int(rng.choice(list(ris)))
+        sd.add_edge(u, r)
+        gdyn.add_edge(u, r)
+        res = sd.apply()
+        geng.apply_delta(gdyn.drain_delta())
+        recompiles += sum(bool(x and x.recompiled) for x in res)
+        both_write()
+    assert recompiles == 0, "headroom churn must patch in place"
+    q = rng.choice(readers, 16)
+    got = np.ravel(stacked.read_batch(q, batch_size=16))
+    want = np.array([np.ravel(_stacked_oracle_read(stacked, sd, r))
+                     for r in q]).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert _stacked_write_sum._cache_size() == w0, \
+        "stacked write retraced under in-capacity churn"
+    assert _stacked_read._cache_size() == r0, \
+        "stacked read retraced under in-capacity churn"
+
+
+def test_stacked_time_window_expiry_survives_slice_patch():
+    """A slice patch refreshes ONE shard's PAOs; the sibling shards' expiry
+    recompute windows must survive — their next extremal write still has to
+    notice entries that expired since THEIR last evaluation (regression:
+    a shared last-eval clock made every other shard skip the expiry sweep
+    and serve stale time-window aggregates)."""
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=3,
+                                                   headroom=2.0)
+    agg = make_aggregate("max")
+    spec = WindowSpec("time", 2.0, capacity=8)
+    stacked = StackedShardedEngine(sharded, agg, spec, base_capacity=2048)
+    sd = ShardedDynamic(sharded, stacked)
+    rng = np.random.default_rng(0)
+    readers = np.array(list(bp.reader_input_sets()))
+
+    ids = np.asarray(bp.writers)
+    stacked.write_batch(ids, np.full(len(ids), 100.0, np.float32),
+                        batch_size=len(ids))                      # t = 0
+    empty = np.zeros(0, np.int64)
+    for _ in range(2):                                            # t = 1, 2
+        stacked.write_batch(empty, np.zeros(0, np.float32), batch_size=4)
+    # in-capacity patch on shard 0 only (a reader shard 0 owns)
+    r0 = next(r for r, s in sharded.reader_shard.items() if s == 0)
+    sd.add_edge(int(rng.integers(0, 150)), int(r0))
+    res = sd.apply()
+    assert not any(bool(x and x.recompiled) for x in res)
+    # next evaluation instant: every t=0 entry is outside the window now,
+    # on EVERY shard — not just the patched one
+    stacked.write_batch(empty, np.zeros(0, np.float32), batch_size=4)  # t = 3
+    q = readers[:16]
+    got = np.ravel(stacked.read_batch(q, batch_size=16))
+    want = np.array([np.ravel(_stacked_oracle_read(stacked, sd, r))
+                     for r in q]).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_stacked_growth_fallback_realigns_whole_stack():
+    """A capacity overflow on ONE shard recompiles it with growth headroom;
+    the stack realigns every sibling to the new padded dims and restacks —
+    reads stay exact against the single-engine oracle."""
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=3)
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 4)
+    stacked = StackedShardedEngine(sharded, agg, spec, base_capacity=4096)
+    gdyn = DynamicOverlay.from_overlay(ov, bp.reader_input_sets())
+    ov0 = gdyn.to_overlay(prune=False)
+    geng = EagrEngine(ov0, dec, agg, spec, headroom=4.0)
+
+    rng = np.random.default_rng(7)
+    ris = bp.reader_input_sets()
+    readers = np.array(list(ris))
+    meta_before = stacked.meta
+
+    ids = rng.choice(bp.writers, 64)
+    vals = rng.normal(size=64).astype(np.float32)
+    stacked.write_batch(ids, vals, batch_size=64)
+    geng.write_batch(ids, vals, batch_size=64)
+
+    sd = ShardedDynamic(sharded, stacked)
+    recompiled = False
+    for k in range(80):
+        nid = 1000 + k
+        ins = {int(x) for x in rng.integers(0, 150, 3)}
+        outs = {int(rng.choice(list(ris)))}
+        sd.add_node(nid, in_neighbors=ins, out_readers=outs)
+        gdyn.add_node(nid, in_neighbors=ins, out_readers=outs)
+        res = sd.apply()
+        geng.apply_delta(gdyn.drain_delta())
+        recompiled = recompiled or any(bool(x and x.recompiled) for x in res)
+        if recompiled:
+            break
+    assert recompiled, "node burst should overflow a zero-headroom stack"
+    # the whole stack realigned onto one (new) program shape
+    assert len({p.meta for p in sharded.shard_plans}) == 1
+    assert stacked.meta == sharded.shard_plans[0].meta
+    assert stacked.meta != meta_before
+
+    ids = rng.choice(bp.writers, 64)
+    vals = rng.normal(size=64).astype(np.float32)
+    stacked.write_batch(ids, vals, batch_size=64)
+    geng.write_batch(ids, vals, batch_size=64)
+    q = rng.choice(readers, 16)
+    np.testing.assert_allclose(
+        np.ravel(stacked.read_batch(q, batch_size=16)),
+        np.ravel(geng.read_batch(q, batch_size=16)), rtol=1e-4, atol=1e-4)
+
+
+def test_shard_read_batch_unknown_base_id_raises():
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=12,
+                                                   n_shards=3, part_seed=1)
+    known = next(iter(sharded.reader_shard))
+    with pytest.raises(ValueError, match="999983"):
+        shard_read_batch(sharded, np.array([known, 999983]))
+    agg = make_aggregate("sum")
+    stacked = StackedShardedEngine(sharded, agg, WindowSpec("tuple", 4))
+    with pytest.raises(ValueError, match="999983"):
+        stacked.read_batch(np.array([known, 999983]))
+
+
+def test_sharded_dynamic_routing_unknown_reader_raises():
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=12,
+                                                   n_shards=3, part_seed=1)
+    sd = ShardedDynamic(sharded)
+    with pytest.raises(ValueError, match="999983"):
+        sd.add_edge(3, 999983)
+    with pytest.raises(ValueError, match="999983"):
+        sd.delete_edge(3, 999983)
+    # add_node registers genuinely new ids instead of raising
+    sd.add_node(999983, in_neighbors={1, 2},
+                out_readers={next(iter(sharded.reader_shard))})
+    assert 999983 in sharded.reader_shard
+    # registered but not yet compiled into any plan (delta still pending):
+    # reading it must still raise, not KeyError on the owning plan's maps
+    with pytest.raises(ValueError, match="999983"):
+        shard_read_batch(sharded, np.array([999983]))
+
+
+def test_stacked_write_drops_out_of_range_ids():
+    """Negative / out-of-range base ids must be dropped on-device (like the
+    single engine drops writes feeding no reader), never aliased onto base
+    id 0 by the owner-map clip."""
+    g, bp, ov, dec, sharded = _eagr_sharded_system(n=150, e=900, seed=12,
+                                                   n_shards=3, part_seed=1)
+    agg = make_aggregate("sum")
+    spec = WindowSpec("tuple", 4)
+    stacked = StackedShardedEngine(sharded, agg, spec)
+    before = jax.device_get(stacked.state.windows.count).copy()
+    stacked.write_batch(np.array([-1, 10 ** 9]),
+                        np.array([5.0, 7.0], np.float32), batch_size=4)
+    after = jax.device_get(stacked.state.windows.count)
+    np.testing.assert_array_equal(before, after)

@@ -456,6 +456,31 @@ def test_extremal_touched_restriction_matches_always_run():
 
 
 # -------------------------------------------------------------- sharded path
+def test_sync_table_scatter_buckets_slot_counts():
+    """Device sync scatters are cache-keyed by a power-of-two slot-count
+    bucket: bursts touching 1..N slots must NOT compile one executable per
+    distinct count (the measured-45ms-each failure mode), and the patched
+    plan stays exact."""
+    from repro.core.plan_patch import _bucket_count, _scatter_slot_patch
+
+    assert _bucket_count(1) == 64
+    assert _bucket_count(64) == 64
+    assert _bucket_count(65) == 256
+
+    eng, dyn, bp = _system(headroom=2.0)
+    rng = np.random.default_rng(0)
+    readers = [r for r in dyn.reader_inputs if dyn.reader_inputs[r]]
+    c0 = _scatter_slot_patch._cache_size()
+    for k in range(6):  # bursts of 1..6 edge adds -> varying slot counts
+        for _ in range(k + 1):
+            dyn.add_edge(int(rng.integers(0, 120)), int(rng.choice(readers)))
+        res = eng.apply_delta(dyn.drain_delta())
+        assert not res.recompiled
+    assert _scatter_slot_patch._cache_size() - c0 <= 2, \
+        "slot scatter compiled per distinct count instead of per bucket"
+    _check_reads(eng, dyn, rng)
+
+
 def test_sharded_dynamic_routes_and_realigns():
     from repro.distributed.eagr_shard import (
         ShardedDynamic,
@@ -497,20 +522,19 @@ def test_sharded_dynamic_routes_and_realigns():
     assert len({p.meta for p in sharded.shard_plans}) == 1
     write(rng.choice(bp.writers, 48), rng.normal(size=48).astype(np.float32))
     readers = rng.choice(list(ris), 20)
-    for s, (eng, (nodes, m)) in enumerate(
-            zip(engines, shard_read_batch(sharded, readers))):
+    for eng, (nodes, m) in zip(engines, shard_read_batch(sharded, readers)):
         if not m.any():
             continue
         ans, _ = eng._read(eng.state, jnp.asarray(nodes), jnp.asarray(m))
-        ans = np.ravel(np.asarray(ans))[: int(m.sum())]
-        owned = [r for r in readers
-                 if sharded.reader_shard.get(int(r)) == s]
-        for a, r in zip(ans, owned):
+        ans = np.asarray(ans)
+        for i, r in enumerate(readers):  # batch-lane order: lane i <-> reader i
+            if not m[i]:
+                continue
             rows = eng.plan.writer_row_of_base
             want = eng.oracle_read(
                 int(r), {int(r): {w for w in ris[int(r)] if w in rows}})
-            np.testing.assert_allclose(a, np.ravel(want), rtol=1e-4,
-                                       atol=1e-4)
+            np.testing.assert_allclose(np.ravel(ans[i]), np.ravel(want),
+                                       rtol=1e-4, atol=1e-4)
 
 
 # ------------------------------------------------------- property-based sweep
