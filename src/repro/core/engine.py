@@ -654,12 +654,17 @@ class EagrEngine:
     # -------------------------------------------------- structural updates
     def apply_delta(self, delta, *, growth: float = 2.0):
         """Apply a ``DynamicOverlay.drain_delta()`` mutation log to the live
-        plan (§3.3 end to end). In-capacity updates patch the level tables in
-        place and reuse every compiled program; a tile/level/capacity
-        overflow falls back to ``compile_plan`` with ``growth`` headroom so
-        the next churn burst patches cheaply. Engine state is migrated: new
-        writer rows are live immediately, retired writer windows are zeroed,
-        and all push PAOs are repaired by one (cached) refresh program.
+        plan (§3.3 end to end). In-capacity updates route through the
+        device-resident patch program: the delta is lowered to a
+        ``plan_patch.PatchProgram`` and one cached ``apply_patch_step`` call
+        rewrites the donated ``PlanArrays`` pytree in place — zero table
+        uploads, every compiled body keeps its program (the old pytree is
+        consumed by the donation; ``_rebind`` below re-points the jitted
+        partials at the patched arrays). A tile/level/capacity overflow
+        falls back to ``compile_plan`` with ``growth`` headroom so the next
+        churn burst patches cheaply. Engine state is migrated: new writer
+        rows are live immediately, retired writer windows are zeroed, and
+        all push PAOs are repaired by one (cached) refresh program.
         Returns the ``plan_patch.PatchResult``."""
         from repro.core.plan_patch import patch_plan
 

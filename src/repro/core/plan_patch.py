@@ -1,4 +1,4 @@
-"""Incremental ExecPlan maintenance: patch ``PlanArrays`` in place (§3.3).
+"""Incremental ExecPlan maintenance: patch ``PlanArrays`` on device (§3.3).
 
 The full-rebuild path (``compile_plan``) re-derives every stacked level table
 and usually retraces the jitted bodies — seconds of latency per structural
@@ -9,32 +9,45 @@ escalating tiers:
   1. **slot patch** — a retired edge's slot is neutralized in place
      (``seg=-1, src=0, sign=0``: the padding pattern every backend drops);
      a new edge claims a free slot inside the owning row tile's block range.
-     Host mirrors mutate slot-wise; the device copy syncs through jitted
-     scatters whose index counts are bucketed to powers of two (see
-     ``_sync_table`` — bounded jit cache, only changed slots travel;
-     ``ops.patch_level`` remains the in-place primitive for jit-resident
-     table updates). Milliseconds, zero shape changes.
-  2. **level relayout** — when a tile has no free slot (or a destination
-     moved into a previously-empty tile) the whole level row is rebuilt from
-     the host mirror (`ops.relayout_level`) — still inside the plan's padded
-     block budget, so shapes and therefore the jit cache are untouched.
+  2. **level relayout** — when a tile's occupancy counter overflows its slot
+     range (or a destination moved into a previously-empty tile) the whole
+     level row is rebuilt from the graph mirror (``ops.relayout_level``) —
+     still inside the plan's padded block budget, so shapes and therefore the
+     jit cache are untouched.
   3. **recompile fallback** — a genuine capacity overflow (nodes, writers,
      levels, blocks, demand slots) falls back to ``compile_plan`` with a
      ``growth``-factor ``PlanPad`` so the *next* churn burst patches cheaply.
+
+Tiers 1 and 2 are **device-resident**: the delta is lowered to a fixed-shape
+``PatchProgram`` — shape-bucketed arrays of (level, slot) edits, touched-mask
+point edits, whole-row relayouts, and decision / writer-row / demand-row
+updates — and applied by ONE cached jitted ``apply_patch_step`` that donates
+the ``PlanArrays`` pytree and scatters every table in place. Only the edits
+travel to the device (explicit ``jax.device_put``); the tables themselves
+never leave device memory. All edit fields share one bucket class
+(``_bucket_class``), so a plan compiles at most ladder-depth patch
+executables over its whole life.
+
+The host side (``PlanHost``) is a *bookkeeping index*, not a table mirror:
+the overlay graph (in-edges, kinds, decisions, levels), per-(level, tile)
+free-slot pools and occupancy counters (the host twin of
+``ops.tile_occupancy``), and per-destination slot assignments. Full numpy
+table mirrors exist only as a parity oracle behind the ``EAGR_PATCH_PARITY``
+debug flag (or ``PlanHost.enable_mirror``), which replays every edit host-side
+and asserts the device tables bit-identical after each patch.
 
 Node ids are kept stable by operating on the **unpruned** overlay export
 (``DynamicOverlay.to_overlay(prune=False)``): dead nodes linger edgeless and
 writer rows are append-only, which is what makes window state migration a
 pad-and-zero instead of a reshuffle.
-
-The patcher owns a host mirror of the plan (``PlanHost``): the overlay graph
-(in-edges, kinds, decisions, levels), numpy copies of every level table, and
-per-(level, tile) free-slot pools derived from the kernel's block routing.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from collections import Counter, deque
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +59,7 @@ from repro.core.engine import (
     ExecPlan,
     LevelTables,
     PlanArrays,
+    PlanMeta,
     compile_plan,
     grow_pad,
     measure_plan,
@@ -55,6 +69,8 @@ from repro.kernels.segment_agg.ops import (
     E_BLK,
     R_BLK,
     relayout_level,
+    scatter_rows,
+    scatter_slots,
     tile_slot_ranges,
 )
 
@@ -63,47 +79,192 @@ class CapacityExceeded(Exception):
     """An in-place patch does not fit the plan's padded capacity."""
 
 
+# ------------------------------------------------------------- patch program
+# Edit-array index value marking shape-bucket padding: out of every table's
+# bounds, so the device scatters drop it (mode="drop") without masking.
+_OOB = np.int32(2 ** 30)
+_SLOT_BUCKET = 64  # slot-edit count floor; buckets grow by powers of 4
+
+
+def _bucket(n: int, floor: int) -> int:
+    """Bucket edit counts to ``floor * 4**k``: ``apply_patch_step`` is
+    cache-keyed by the program's array shapes, so distinct edit counts would
+    otherwise each compile their own executable. A coarse geometric ladder
+    keeps the cache at a handful of executables — padding entries carry an
+    out-of-bounds index and are dropped by the scatters."""
+    b = floor
+    while b < n:
+        b *= 4
+    return b
+
+
+def _bucket_class(counts_floors) -> int:
+    """One shared ladder rung for a GROUP of edit fields: every field in the
+    group is padded to ``floor * 4**class``. Independent per-field ladders
+    would make the program's shape signature a product of ladders (a compile
+    per combination — the measured 10%-churn compile storm); a shared class
+    caps the signature count at the ladder depth."""
+    c = 0
+    for n, floor in counts_floors:
+        k, b = 0, floor
+        while b < n:
+            b *= 4
+            k += 1
+        c = max(c, k)
+    return c
+
+
+class TablePatch(NamedTuple):
+    """One edge set's device edits, shape-bucketed (see ``_bucket``)."""
+
+    lvl: jnp.ndarray        # (P,) i32 slot-edit levels, _OOB padding
+    slot: jnp.ndarray       # (P,) i32 slot-edit positions
+    seg: jnp.ndarray        # (P,) i32 new destinations (-1 retires)
+    src: jnp.ndarray        # (P,) i32 new sources
+    sign: jnp.ndarray       # (P,) f32 new signs
+    t_lvl: jnp.ndarray      # (T,) i32 touched-mask point edits, _OOB padding
+    t_node: jnp.ndarray     # (T,) i32 destination whose touched bit flips
+    t_val: jnp.ndarray      # (T,) bool new touched bit
+    row_lvl: jnp.ndarray    # (R,) i32 relayout levels, _OOB padding
+    row_seg: jnp.ndarray    # (R, e_pad) i32 replacement rows
+    row_src: jnp.ndarray    # (R, e_pad) i32
+    row_sign: jnp.ndarray   # (R, e_pad) f32
+    row_tob: jnp.ndarray    # (R, n_blocks) i32
+    row_fot: jnp.ndarray    # (R, n_blocks) i32
+    row_touched: jnp.ndarray  # (R, cap) bool replacement touched rows
+
+
+class PatchProgram(NamedTuple):
+    """A lowered ``OverlayDelta``: every device-side effect of one in-capacity
+    patch as fixed-shape arrays, applied by ``apply_patch_step`` in one jitted
+    call. Only these (bucketed, edit-sized) arrays travel host->device."""
+
+    push: TablePatch
+    pull: TablePatch
+    dec_idx: jnp.ndarray    # (C,) i32 nodes whose PUSH/PULL decision flipped
+    dec_val: jnp.ndarray    # (C,) i32
+    w_row: jnp.ndarray      # (W,) i32 newly claimed writer rows
+    w_node: jnp.ndarray     # (W,) i32 their overlay nodes
+    d_lvl: jnp.ndarray      # (D,) i32 demand levels rebuilt, _OOB padding
+    d_dst: jnp.ndarray      # (D, d_pad) i32 replacement demand rows
+    d_src: jnp.ndarray      # (D, d_pad) i32
+
+
+def _apply_table(t: LevelTables, p: TablePatch) -> LevelTables:
+    seg = scatter_slots(t.seg, p.lvl, p.slot, p.seg)
+    src = scatter_slots(t.src, p.lvl, p.slot, p.src)
+    sign = scatter_slots(t.sign, p.lvl, p.slot, p.sign)
+    touched = scatter_slots(t.touched, p.t_lvl, p.t_node, p.t_val)
+    seg = scatter_rows(seg, p.row_lvl, p.row_seg)
+    src = scatter_rows(src, p.row_lvl, p.row_src)
+    sign = scatter_rows(sign, p.row_lvl, p.row_sign)
+    tob = scatter_rows(t.tile_of_block, p.row_lvl, p.row_tob)
+    fot = scatter_rows(t.first_of_tile, p.row_lvl, p.row_fot)
+    touched = scatter_rows(touched, p.row_lvl, p.row_touched)
+    return LevelTables(seg=seg, src=src, sign=sign, tile_of_block=tob,
+                       first_of_tile=fot, touched=touched)
+
+
+def apply_patch_program(arrays: PlanArrays, prog: PatchProgram) -> PlanArrays:
+    """Pure patch body — embeddable in larger programs; ``distributed/
+    stacked.py`` runs it masked under ``shard_map``/``vmap`` to patch one
+    slice of a stacked plan pytree without leaving the device."""
+    push = _apply_table(arrays.push, prog.push)
+    pull = _apply_table(arrays.pull, prog.pull)
+    decision = arrays.decision.at[prog.dec_idx].set(prog.dec_val, mode="drop")
+    writer_node = arrays.writer_node.at[prog.w_row].set(prog.w_node,
+                                                        mode="drop")
+    demand_dst = arrays.demand_dst.at[prog.d_lvl].set(prog.d_dst, mode="drop")
+    demand_src = arrays.demand_src.at[prog.d_lvl].set(prog.d_src, mode="drop")
+    return PlanArrays(decision=decision, writer_node=writer_node, push=push,
+                      pull=pull, demand_dst=demand_dst, demand_src=demand_src)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def apply_patch_step(meta: PlanMeta, arrays: PlanArrays,
+                     prog: PatchProgram) -> PlanArrays:
+    """The device-resident table update: donates the live ``PlanArrays``
+    pytree (tables are rewritten in place, never copied through the host) and
+    applies one lowered delta. One cache entry per (meta, program-bucket)
+    pair — in-capacity churn stays on a single compiled step."""
+    del meta  # shapes key the cache; meta pins the entry to its plan
+    return apply_patch_program(arrays, prog)
+
+
 # --------------------------------------------------------------- host mirrors
 @dataclasses.dataclass
-class TableHost:
-    """Numpy mirror of one ``LevelTables`` plus slot bookkeeping."""
+class TableMirror:
+    """Full numpy twin of one ``LevelTables`` — the parity oracle. Maintained
+    only under ``EAGR_PATCH_PARITY`` / ``PlanHost.enable_mirror``; the hot
+    path never reads or uploads it."""
 
-    seg: np.ndarray               # (L, e_pad) int32
-    src: np.ndarray               # (L, e_pad) int32
-    sign: np.ndarray              # (L, e_pad) f32
-    tob: np.ndarray               # (L, n_blocks) int32
-    fot: np.ndarray               # (L, n_blocks) int32
-    touched: np.ndarray           # (L, cap) bool
-    tile_slots: np.ndarray        # (L, n_row_tiles, 2) [start, stop) per tile
-    slots_of: dict[int, list[int]] = dataclasses.field(default_factory=dict)
-    level_of: dict[int, int] = dataclasses.field(default_factory=dict)
-    free: dict[tuple[int, int], list[int]] = dataclasses.field(default_factory=dict)
+    seg: np.ndarray
+    src: np.ndarray
+    sign: np.ndarray
+    touched: np.ndarray
 
     @staticmethod
-    def from_tables(t: LevelTables, n_row_tiles: int) -> "TableHost":
-        seg = np.array(t.seg)
-        L = seg.shape[0]
+    def from_tables(t: LevelTables) -> "TableMirror":
+        return TableMirror(seg=np.array(t.seg), src=np.array(t.src),
+                           sign=np.array(t.sign), touched=np.array(t.touched))
+
+
+@dataclasses.dataclass
+class TableHost:
+    """Bookkeeping index of one ``LevelTables``: block routing, free-slot
+    pools, per-tile occupancy counters (host twin of ``ops.tile_occupancy``)
+    and per-destination slot assignments. Holds no authoritative copy of the
+    device tables — mutations accumulate as edits for the patch program."""
+
+    tob: np.ndarray               # (L, n_blocks) int32
+    fot: np.ndarray               # (L, n_blocks) int32
+    tile_slots: np.ndarray        # (L, n_row_tiles, 2) [start, stop) per tile
+    occ: np.ndarray               # (L, n_row_tiles) int32 live slots per tile
+    e_pad: int
+    # d -> [(slot, src, sign)], and d -> level
+    slots_of: dict[int, list[tuple[int, int, float]]] = \
+        dataclasses.field(default_factory=dict)
+    level_of: dict[int, int] = dataclasses.field(default_factory=dict)
+    free: dict[tuple[int, int], list[int]] = dataclasses.field(default_factory=dict)
+    mirror: TableMirror | None = None
+    # edits of the in-flight patch, drained into a TablePatch
+    edits: dict[tuple[int, int], tuple[int, int, float]] = \
+        dataclasses.field(default_factory=dict)
+    touched_edits: dict[tuple[int, int], bool] = \
+        dataclasses.field(default_factory=dict)
+    row_edits: dict[int, tuple] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_tables(t: LevelTables, n_row_tiles: int,
+                    track_mirror: bool = False) -> "TableHost":
+        seg = np.asarray(t.seg)
+        src = np.asarray(t.src)
+        sign = np.asarray(t.sign)
         tob = np.array(t.tile_of_block)
+        L = seg.shape[0]
         th = TableHost(
-            seg=seg, src=np.array(t.src), sign=np.array(t.sign),
-            tob=tob, fot=np.array(t.first_of_tile), touched=np.array(t.touched),
+            tob=tob, fot=np.array(t.first_of_tile),
             tile_slots=np.stack([tile_slot_ranges(tob[l], n_row_tiles)
                                  for l in range(L)]),
+            occ=np.zeros((L, n_row_tiles), np.int32),
+            e_pad=seg.shape[1],
         )
         for l in range(L):
-            th.index_level(l)
+            th.index_level(l, seg[l], src[l], sign[l])
+        if track_mirror:
+            th.mirror = TableMirror.from_tables(t)
         return th
 
-    def index_level(self, l: int) -> None:
+    def index_level(self, l: int, seg_row: np.ndarray, src_row: np.ndarray,
+                    sign_row: np.ndarray) -> None:
         """Rebuild slot occupancy and the free pools of one level row."""
         for d in [d for d, lv in self.level_of.items() if lv == l]:
             self.slots_of.pop(d, None)
             self.level_of.pop(d, None)
-        row = self.seg[l]
-        occ_mask = row >= 0
+        occ_mask = seg_row >= 0
         occupied = np.flatnonzero(occ_mask)
         # group occupied slots by destination (vectorized: sort-then-split)
-        dsts = row[occupied]
+        dsts = seg_row[occupied]
         order = np.argsort(dsts, kind="stable")
         sorted_dsts = dsts[order]
         sorted_slots = occupied[order]
@@ -111,22 +272,90 @@ class TableHost:
         bounds = np.append(starts, len(sorted_dsts))
         for i, d in enumerate(uniq):
             d = int(d)
-            self.slots_of[d] = sorted_slots[bounds[i]: bounds[i + 1]].tolist()
+            self.slots_of[d] = [(int(s), int(src_row[s]), float(sign_row[s]))
+                                for s in sorted_slots[bounds[i]: bounds[i + 1]]]
             self.level_of[d] = l
         free_mask = ~occ_mask
         for t in range(self.tile_slots.shape[1]):
             a, b = int(self.tile_slots[l, t, 0]), int(self.tile_slots[l, t, 1])
-            self.free[(l, t)] = [] if a == b else \
+            pool = [] if a == b else \
                 (np.flatnonzero(free_mask[a:b])[::-1] + a).tolist()
+            self.free[(l, t)] = pool
+            self.occ[l, t] = (b - a) - len(pool)
+
+    def record(self, l: int, slot: int, seg_v: int, src_v: int,
+               sign_v: float) -> None:
+        """Log one slot edit for the patch program (last write wins); replay
+        it on the parity mirror when tracking."""
+        self.edits[(l, slot)] = (seg_v, src_v, sign_v)
+        if self.mirror is not None:
+            self.mirror.seg[l, slot] = seg_v
+            self.mirror.src[l, slot] = src_v
+            self.mirror.sign[l, slot] = sign_v
 
     def n_edges(self) -> int:
         return sum(len(s) for s in self.slots_of.values())
 
+    def drain_patch(self, cap: int, cls_idx: int, cls_row: int) -> TablePatch:
+        """Drain the accumulated edits into numpy program arrays, padded to
+        the shared bucket classes (see ``_bucket_class``), and replay touched
+        changes on the parity mirror when tracking."""
+        items = sorted(self.edits.items())
+        k = _SLOT_BUCKET * 4 ** cls_idx
+        lvl = _OOB + np.arange(k, dtype=np.int32)  # distinct OOB padding
+        # (scatters promise unique_indices; dropped entries stay unique)
+        slot = np.zeros(k, np.int32)
+        seg_v = np.zeros(k, np.int32)
+        src_v = np.zeros(k, np.int32)
+        sign_v = np.zeros(k, np.float32)
+        for i, ((l, s), (sv, rv, gv)) in enumerate(items):
+            lvl[i], slot[i] = l, s
+            seg_v[i], src_v[i], sign_v[i] = sv, rv, gv
+        touches = sorted(self.touched_edits.items())
+        tk = _SLOT_BUCKET * 4 ** cls_idx
+        t_lvl = _OOB + np.arange(tk, dtype=np.int32)
+        t_node = np.zeros(tk, np.int32)
+        t_val = np.zeros(tk, bool)
+        for i, ((l, d), v) in enumerate(touches):
+            t_lvl[i], t_node[i], t_val[i] = l, d, v
+        rows = sorted(self.row_edits.items())
+        # never pad the relayout group past the level count: a slot-heavy
+        # burst (high shared class) must not upload megabytes of all-padding
+        # (R, e_pad) rows. L is a per-plan constant, so the jit-cache
+        # signature count stays ladder-bounded.
+        rk = min(4 ** cls_row, self.tob.shape[0])
+        nb = self.tob.shape[1]
+        row_lvl = _OOB + np.arange(rk, dtype=np.int32)
+        row_seg = np.zeros((rk, self.e_pad), np.int32)
+        row_src = np.zeros((rk, self.e_pad), np.int32)
+        row_sign = np.zeros((rk, self.e_pad), np.float32)
+        row_tob = np.zeros((rk, nb), np.int32)
+        row_fot = np.zeros((rk, nb), np.int32)
+        row_touched = np.zeros((rk, cap), bool)
+        for i, (l, (sr, rr, gr, tr, fr, trow)) in enumerate(rows):
+            row_lvl[i] = l
+            row_seg[i], row_src[i], row_sign[i] = sr, rr, gr
+            row_tob[i], row_fot[i] = tr, fr
+            row_touched[i] = trow
+        if self.mirror is not None:
+            for (l, d), v in touches:
+                self.mirror.touched[l, d] = v
+            for l, (*_, trow) in rows:
+                self.mirror.touched[l] = trow
+        self.edits.clear()
+        self.touched_edits.clear()
+        self.row_edits.clear()
+        return TablePatch(lvl=lvl, slot=slot, seg=seg_v, src=src_v,
+                          sign=sign_v, t_lvl=t_lvl, t_node=t_node,
+                          t_val=t_val, row_lvl=row_lvl, row_seg=row_seg,
+                          row_src=row_src, row_sign=row_sign, row_tob=row_tob,
+                          row_fot=row_fot, row_touched=row_touched)
+
 
 @dataclasses.dataclass
 class PlanHost:
-    """Host-side authoritative mirror of a live plan: the (unpruned) overlay
-    graph plus numpy copies of every routing table."""
+    """Host-side bookkeeping index of a live plan: the (unpruned) overlay
+    graph plus slot-pool state — NOT a table mirror (see module docstring)."""
 
     kinds: list[str]
     origin: list[int]
@@ -140,14 +369,19 @@ class PlanHost:
     n_real: int
     dup_insensitive: bool = False
     retired_writer_bases: set[int] = dataclasses.field(default_factory=set)
+    track_mirror: bool = False
+    auto_verify: bool = False
 
     @staticmethod
-    def from_plan(plan: ExecPlan, overlay: Overlay) -> "PlanHost":
+    def from_plan(plan: ExecPlan, overlay: Overlay, *,
+                  mirror: bool | None = None) -> "PlanHost":
         if overlay.n_nodes != len(plan.level):
             raise ValueError(
                 f"overlay has {overlay.n_nodes} nodes but the plan was "
                 f"compiled over {len(plan.level)} — pass the (unpruned) "
                 f"overlay the plan was compiled from")
+        parity_env = os.environ.get("EAGR_PATCH_PARITY", "") not in ("", "0")
+        track = parity_env if mirror is None else mirror
         meta = plan.meta
         cap = meta.n_nodes
         in_edges = [list(e) for e in overlay.in_edges]
@@ -168,10 +402,14 @@ class PlanHost:
             kinds=kinds, origin=origin, in_edges=in_edges, out=out,
             decision=np.array(plan.arrays.decision, dtype=np.int64),
             level=level,
-            push=TableHost.from_tables(plan.arrays.push, meta.n_row_tiles),
-            pull=TableHost.from_tables(plan.arrays.pull, meta.n_row_tiles),
+            push=TableHost.from_tables(plan.arrays.push, meta.n_row_tiles,
+                                       track),
+            pull=TableHost.from_tables(plan.arrays.pull, meta.n_row_tiles,
+                                       track),
             demand=demand, n_real=overlay.n_nodes,
             dup_insensitive=overlay.dup_insensitive,
+            track_mirror=track, auto_verify=parity_env if mirror is None
+            else False,
         )
 
     def export_overlay(self) -> Overlay:
@@ -179,6 +417,56 @@ class PlanHost:
                        origin=list(self.origin[: self.n_real]),
                        in_edges=[list(e) for e in self.in_edges[: self.n_real]],
                        dup_insensitive=self.dup_insensitive)
+
+    def enable_mirror(self, plan: ExecPlan) -> None:
+        """Start parity tracking mid-life: seed the table mirrors from the
+        current device arrays (one device->host pull)."""
+        self.push.mirror = TableMirror.from_tables(plan.arrays.push)
+        self.pull.mirror = TableMirror.from_tables(plan.arrays.pull)
+        self.track_mirror = True
+
+    def verify_device(self, plan: ExecPlan) -> None:
+        """Parity oracle: assert the device ``PlanArrays`` are bit-identical
+        to the host-side expectation (mirrored tables + bookkeeping). Needs
+        mirror tracking (``EAGR_PATCH_PARITY`` / ``enable_mirror``)."""
+        if self.push.mirror is None or self.pull.mirror is None:
+            raise RuntimeError("parity check needs mirror tracking — set "
+                               "EAGR_PATCH_PARITY=1 or call enable_mirror()")
+        a = plan.arrays
+        cap = plan.meta.n_nodes
+        bad = []
+        for name, th in (("push", self.push), ("pull", self.pull)):
+            t = getattr(a, name)
+            m = th.mirror
+            for f, dev, want in (("seg", t.seg, m.seg), ("src", t.src, m.src),
+                                 ("sign", t.sign, m.sign),
+                                 ("touched", t.touched, m.touched),
+                                 ("tile_of_block", t.tile_of_block, th.tob),
+                                 ("first_of_tile", t.first_of_tile, th.fot)):
+                if not np.array_equal(np.asarray(dev), want):
+                    bad.append(f"{name}.{f}")
+        if not np.array_equal(np.asarray(a.decision),
+                              self.decision[:cap].astype(np.int32)):
+            bad.append("decision")
+        wn = np.full(plan.meta.n_writers, cap, np.int32)
+        wn[: len(plan.writer_node)] = plan.writer_node
+        if not np.array_equal(np.asarray(a.writer_node), wn):
+            bad.append("writer_node")
+        L, d_pad = np.asarray(a.demand_dst).shape
+        dd = np.full((L, d_pad), cap, np.int32)
+        ds = np.full((L, d_pad), cap, np.int32)
+        for l, pairs in enumerate(self.demand):
+            if pairs:
+                arr = np.asarray(pairs, np.int64)
+                dd[l, : len(pairs)] = arr[:, 0]
+                ds[l, : len(pairs)] = arr[:, 1]
+        if not np.array_equal(np.asarray(a.demand_dst), dd):
+            bad.append("demand_dst")
+        if not np.array_equal(np.asarray(a.demand_src), ds):
+            bad.append("demand_src")
+        if bad:
+            raise AssertionError(
+                f"device/host parity broken after patch: {bad}")
 
 
 # ------------------------------------------------------------------- results
@@ -190,6 +478,9 @@ class PatchResult:
     overlay: Overlay | None                  # fresh export iff recompiled
     retired_writer_rows: list[int]
     stats: dict
+    program: PatchProgram | None = None      # device program (in-capacity
+                                             # patches) — reusable by stacked
+                                             # deployments for slice patching
 
 
 # ------------------------------------------------------------ graph updating
@@ -256,70 +547,71 @@ def _slot_tile(th: TableHost, l: int, slot: int) -> int:
     return int(th.tob[l, slot // E_BLK])
 
 
-def _free_slots(th: TableHost, d: int, pend: dict, stats: dict) -> None:
-    slots = th.slots_of.pop(d, None)
-    if slots is None:
+def _free_slots(th: TableHost, d: int, stats: dict) -> None:
+    entries = th.slots_of.pop(d, None)
+    if entries is None:
         return
     l = th.level_of.pop(d)
-    for s in slots:
-        th.seg[l, s] = -1
-        th.src[l, s] = 0
-        th.sign[l, s] = 0.0
-        th.free[(l, _slot_tile(th, l, s))].append(s)
-        pend.setdefault(l, set()).add(s)
-    stats["edges_removed"] += len(slots)
+    for slot, _, _ in entries:
+        t = _slot_tile(th, l, slot)
+        th.free[(l, t)].append(slot)
+        th.occ[l, t] -= 1
+        th.record(l, slot, -1, 0, 0.0)
+    th.touched_edits[(l, d)] = False  # d left the level entirely
+    stats["edges_removed"] += len(entries)
 
 
-def _claim_slots(th: TableHost, d: int, edges, l: int, pend: dict,
-                 rebuild: set, stats: dict) -> None:
+def _claim_slots(th: TableHost, d: int, edges, l: int, rebuild: set,
+                 stats: dict) -> None:
     """Place ``edges`` (src, sign) of destination ``d`` into free slots of its
     owning tile at level ``l``; escalate the level to a relayout when the
-    tile's pool runs dry."""
+    tile's occupancy counter overflows its slot range."""
     if l in rebuild:
         return  # the level row is being rebuilt from the graph mirror anyway
-    pool = th.free.get((l, d // R_BLK), [])
-    if len(pool) < len(edges):
+    t = d // R_BLK
+    a, b = int(th.tile_slots[l, t, 0]), int(th.tile_slots[l, t, 1])
+    if int(th.occ[l, t]) + len(edges) > b - a:
         rebuild.add(l)
         return
+    pool = th.free[(l, t)]
     for s_, sg in edges:
         slot = pool.pop()
-        th.seg[l, slot] = d
-        th.src[l, slot] = s_
-        th.sign[l, slot] = sg
-        th.slots_of.setdefault(d, []).append(slot)
+        th.occ[l, t] += 1
+        th.record(l, slot, d, int(s_), float(sg))
+        th.slots_of.setdefault(d, []).append((slot, int(s_), float(sg)))
         th.level_of[d] = l
-        pend.setdefault(l, set()).add(slot)
+    if edges:
+        th.touched_edits[(l, d)] = True
     stats["edges_added"] += len(edges)
 
 
-def _diff_in_place(th: TableHost, d: int, new_edges, l: int, pend: dict,
+def _diff_in_place(th: TableHost, d: int, new_edges, l: int,
                    rebuild: set, stats: dict) -> None:
     """Destination stays in the same table and level: free only the removed
     edges' slots and claim slots only for the added ones."""
-    slots = th.slots_of.get(d, [])
+    entries = th.slots_of.get(d, [])
     need = Counter((int(s), float(g)) for s, g in new_edges)
     keep, freed = [], []
-    for s in slots:
-        e = (int(th.src[l, s]), float(th.sign[l, s]))
-        if need[e] > 0:
-            need[e] -= 1
-            keep.append(s)
+    for slot, s, g in entries:
+        if need[(s, g)] > 0:
+            need[(s, g)] -= 1
+            keep.append((slot, s, g))
         else:
-            freed.append(s)
-    for s in freed:
-        th.seg[l, s] = -1
-        th.src[l, s] = 0
-        th.sign[l, s] = 0.0
-        th.free[(l, _slot_tile(th, l, s))].append(s)
-        pend.setdefault(l, set()).add(s)
+            freed.append(slot)
+    for slot in freed:
+        t = _slot_tile(th, l, slot)
+        th.free[(l, t)].append(slot)
+        th.occ[l, t] -= 1
+        th.record(l, slot, -1, 0, 0.0)
     stats["edges_removed"] += len(freed)
     th.slots_of[d] = keep
     if not keep:
         th.slots_of.pop(d, None)
         th.level_of.pop(d, None)
+        th.touched_edits[(l, d)] = False
     missing = [e for e, c in need.items() for _ in range(c)]
     if missing:
-        _claim_slots(th, d, missing, l, pend, rebuild, stats)
+        _claim_slots(th, d, missing, l, rebuild, stats)
 
 
 def _rebuild_level(host: PlanHost, th: TableHost, table: str, l: int,
@@ -334,114 +626,25 @@ def _rebuild_level(host: PlanHost, th: TableHost, table: str, l: int,
             sign_l.append(sg)
     rl = relayout_level(np.asarray(dst_l, np.int64), np.asarray(src_l, np.int64),
                         np.asarray(sign_l, np.float64), cap,
-                        th.tob.shape[1], th.seg.shape[1])
+                        th.tob.shape[1], th.e_pad)
     if rl is None:
         raise CapacityExceeded(f"{table} level {l} exceeds the block budget")
-    th.seg[l], th.src[l], th.sign[l], th.tob[l], th.fot[l] = rl
-    th.tile_slots[l] = tile_slot_ranges(th.tob[l], n_row_tiles)
-    th.index_level(l)
-
-
-_SLOT_BUCKET = 64  # scatter index-count floor; buckets grow by powers of 4
-
-
-def _bucket_count(n: int) -> int:
-    """Bucket scatter index counts to ``64 * 4**k``: the jitted scatters
-    below are cache-keyed by their index shape, so distinct slot counts would
-    otherwise each compile their own executable (~45ms on CPU). A coarse
-    geometric ladder keeps the whole cache at a handful of executables —
-    padding entries are idempotent duplicate writes, and scattering 4x more
-    indices than needed is noise next to the table copy itself."""
-    b = _SLOT_BUCKET
-    while b < n:
-        b *= 4
-    return b
-
-
-@jax.jit
-def _scatter_slot_patch(seg, src, sign, lvl, slot, seg_v, src_v, sign_v):
-    """Rewrite individual (level, slot) entries of the stacked edge tables
-    (the device-side twin of ``ops.patch_level``, batched across levels)."""
-    return (seg.at[lvl, slot].set(seg_v),
-            src.at[lvl, slot].set(src_v),
-            sign.at[lvl, slot].set(sign_v))
-
-
-@jax.jit
-def _scatter_level_rows(seg, src, sign, tob, fot, lvls,
-                        seg_r, src_r, sign_r, tob_r, fot_r):
-    """Replace whole level rows (the relayout path)."""
-    return (seg.at[lvls].set(seg_r), src.at[lvls].set(src_r),
-            sign.at[lvls].set(sign_r), tob.at[lvls].set(tob_r),
-            fot.at[lvls].set(fot_r))
-
-
-@jax.jit
-def _scatter_touched(touched, lvls, rows):
-    return touched.at[lvls].set(rows)
-
-
-def _sync_table(t: LevelTables, th: TableHost, pend: dict, rebuilds: set,
-                cap: int) -> LevelTables:
-    """Push the host mirror's changed slots/rows to the device tables without
-    changing any padded dim (so jitted consumers keep their programs).
-
-    Slot-level changes go through a jitted scatter whose index count is
-    bucketed (``_bucket_count`` — padding repeats the last entry, an
-    idempotent duplicate write), so the jit cache holds a handful of
-    executables per table shape instead of one per distinct slot count, and
-    only the changed slots/rows travel to the device. Heavy churn — changed
-    slots plus rebuilt rows approaching the table itself — falls back to the
-    wholesale re-upload, which is one plain transfer with no scatter at all."""
-    if not (pend or rebuilds):
-        return t
-    changed_levels = sorted(set(pend) | rebuilds)
-    for l in changed_levels:
-        row = np.zeros(cap, bool)
-        segl = th.seg[l]
-        row[segl[segl >= 0]] = True
-        th.touched[l] = row
-
-    L, e_pad = th.seg.shape
-    entries = [(l, s) for l in sorted(set(pend) - rebuilds)
-               for s in sorted(pend[l])]
-    if len(entries) + len(rebuilds) * e_pad >= (L * e_pad) // 4:
-        return LevelTables(seg=jnp.asarray(th.seg), src=jnp.asarray(th.src),
-                           sign=jnp.asarray(th.sign),
-                           tile_of_block=jnp.asarray(th.tob),
-                           first_of_tile=jnp.asarray(th.fot),
-                           touched=jnp.asarray(th.touched))
-
-    seg, src, sign = t.seg, t.src, t.sign
-    tob, fot = t.tile_of_block, t.first_of_tile
-    if entries:
-        k = _bucket_count(len(entries))
-        entries += [entries[-1]] * (k - len(entries))
-        lvl = np.asarray([e[0] for e in entries], np.int32)
-        slot = np.asarray([e[1] for e in entries], np.int32)
-        seg, src, sign = _scatter_slot_patch(
-            seg, src, sign, jnp.asarray(lvl), jnp.asarray(slot),
-            jnp.asarray(th.seg[lvl, slot]), jnp.asarray(th.src[lvl, slot]),
-            jnp.asarray(th.sign[lvl, slot]))
-
-    if rebuilds:
-        lv = sorted(rebuilds)
-        k = min(_bucket_count(len(lv)), L)  # never pad past the level count
-        lv = np.asarray(lv + [lv[-1]] * (k - len(lv)), np.int32)
-        seg, src, sign, tob, fot = _scatter_level_rows(
-            seg, src, sign, tob, fot, jnp.asarray(lv),
-            jnp.asarray(th.seg[lv]), jnp.asarray(th.src[lv]),
-            jnp.asarray(th.sign[lv]), jnp.asarray(th.tob[lv]),
-            jnp.asarray(th.fot[lv]))
-
-    k = min(_bucket_count(len(changed_levels)), L)
-    lv = np.asarray(changed_levels
-                    + [changed_levels[-1]] * (k - len(changed_levels)),
-                    np.int32)
-    touched = _scatter_touched(t.touched, jnp.asarray(lv),
-                               jnp.asarray(th.touched[lv]))
-    return LevelTables(seg=seg, src=src, sign=sign, tile_of_block=tob,
-                       first_of_tile=fot, touched=touched)
+    seg_row, src_row, sign_row, tob_row, fot_row = rl
+    th.tob[l] = tob_row
+    th.fot[l] = fot_row
+    th.tile_slots[l] = tile_slot_ranges(tob_row, n_row_tiles)
+    for key in [k for k in th.edits if k[0] == l]:
+        del th.edits[key]  # superseded by the whole-row rewrite
+    for key in [k for k in th.touched_edits if k[0] == l]:
+        del th.touched_edits[key]
+    trow = np.zeros(cap, bool)
+    trow[seg_row[seg_row >= 0]] = True
+    th.row_edits[l] = (seg_row, src_row, sign_row, tob_row, fot_row, trow)
+    th.index_level(l, seg_row, src_row, sign_row)
+    if th.mirror is not None:
+        th.mirror.seg[l] = seg_row
+        th.mirror.src[l] = src_row
+        th.mirror.sign[l] = sign_row
 
 
 # --------------------------------------------------------------------- patch
@@ -450,11 +653,13 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
                growth: float = 2.0) -> PatchResult:
     """Apply one ``OverlayDelta`` to a live plan.
 
-    In-capacity updates mutate ``plan`` in place (new ``PlanArrays`` pytree,
-    same ``PlanMeta`` — so every jitted body keeps its compiled program);
-    overflows recompile with ``growth`` headroom. ``overlay`` is only needed
-    on the first patch of a plan, to seed the host mirror; it must be the
-    (unpruned) overlay the plan was compiled from."""
+    In-capacity updates lower the delta to a ``PatchProgram`` and rewrite the
+    donated ``PlanArrays`` pytree with one cached ``apply_patch_step`` call
+    (same ``PlanMeta``, zero table uploads — so every jitted body keeps its
+    compiled program); overflows recompile with ``growth`` headroom.
+    ``overlay`` is only needed on the first patch of a plan, to seed the host
+    bookkeeping; it must be the (unpruned) overlay the plan was compiled
+    from."""
     if delta.empty:
         return PatchResult(plan, False, "empty delta", None, [], {})
     host: PlanHost = plan.host  # type: ignore[assignment]
@@ -518,7 +723,6 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
 
     # ---------------------------------------------- phase C: table patching
     rehome = set(delta.nodes) | changed_level | changed_dec
-    pend = {"push": {}, "pull": {}}
     rebuild = {"push": set(), "pull": set()}
     demand_levels: set[int] = set()
     try:
@@ -538,14 +742,14 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
             if old == (new_table, new_l):
                 _diff_in_place(getattr(host, new_table), d,
                                host.in_edges[d], new_l,
-                               pend[new_table], rebuild[new_table], stats)
+                               rebuild[new_table], stats)
             else:
                 if old:
-                    _free_slots(getattr(host, old[0]), d, pend[old[0]], stats)
+                    _free_slots(getattr(host, old[0]), d, stats)
                 if new_table:
                     _claim_slots(getattr(host, new_table), d,
                                  host.in_edges[d], new_l,
-                                 pend[new_table], rebuild[new_table], stats)
+                                 rebuild[new_table], stats)
         for v in changed_dec:
             for c in host.out[v]:
                 if host.level[c] >= 1 and host.decision[c] == PULL:
@@ -573,41 +777,63 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     except CapacityExceeded as e:
         return fallback(str(e))
 
-    # ---------------------------------------------- phase D: device sync
-    arrays = plan.arrays
-    push_t = _sync_table(arrays.push, host.push, pend["push"],
-                         rebuild["push"], cap)
-    pull_t = _sync_table(arrays.pull, host.pull, pend["pull"],
-                         rebuild["pull"], cap)
-    dd, ds = arrays.demand_dst, arrays.demand_src
-    if new_demand_rows:
-        dd_h, ds_h = np.array(dd), np.array(ds)
-        for l, pairs in sorted(new_demand_rows.items()):
-            host.demand[l] = pairs
-            dd_h[l] = cap
-            ds_h[l] = cap
-            if pairs:
-                arr = np.asarray(pairs, np.int64)
-                dd_h[l, : len(pairs)] = arr[:, 0]
-                ds_h[l, : len(pairs)] = arr[:, 1]
-        dd, ds = jnp.asarray(dd_h), jnp.asarray(ds_h)
-    decision = arrays.decision
-    if changed_dec:
-        decision = jnp.asarray(host.decision[:cap].astype(np.int32))
-    writer_node = arrays.writer_node
+    # -------------------------------- phase D: lower + run the patch program
+    stats["slot_levels"] = len({l for l, _ in host.push.edits}
+                               | {l for l, _ in host.pull.edits})
+    stats["demand_levels"] = len(new_demand_rows)
     # every new W-kind node claims a row (id order), even if it was deleted
     # within this epoch — keeps row positions identical to what a recompile
     # over the unpruned overlay would assign, so window state migrates by
     # position safely
+    first_new_row = len(plan.writer_node)
     for nid in sorted(delta.new_writer_nodes):
         plan.writer_node = np.append(plan.writer_node, nid)
-    if delta.new_writer_nodes:
-        wnode = np.full(meta.n_writers, cap, np.int32)
-        wnode[: len(plan.writer_node)] = plan.writer_node
-        writer_node = jnp.asarray(wnode)
-    plan.arrays = PlanArrays(decision=decision, writer_node=writer_node,
-                             push=push_t, pull=pull_t,
-                             demand_dst=dd, demand_src=ds)
+    n_new = len(plan.writer_node) - first_new_row
+    decs = sorted(int(v) for v in changed_dec)
+    # ONE shared class for every edit field: the program's shape signature
+    # moves along a single ladder, so a plan compiles at most ladder-depth
+    # apply_patch_step executables over its whole life (compile storms at
+    # high churn ratios were the dominant patch cost)
+    cls = _bucket_class([
+        (len(host.push.edits), _SLOT_BUCKET),
+        (len(host.pull.edits), _SLOT_BUCKET),
+        (len(host.push.touched_edits), _SLOT_BUCKET),
+        (len(host.pull.touched_edits), _SLOT_BUCKET),
+        (len(decs), 32), (n_new, 8),
+        (len(host.push.row_edits), 1), (len(host.pull.row_edits), 1),
+        (len(new_demand_rows), 4)])
+    cls_idx = cls_row = cls
+    # like the relayout group, demand rows never pad past the level count
+    dk = min(4 * 4 ** cls_row, int(plan.arrays.demand_dst.shape[0]))
+    d_lvl = _OOB + np.arange(dk, dtype=np.int32)  # distinct OOB padding
+    d_dst = np.zeros((dk, d_pad), np.int32)
+    d_src = np.zeros((dk, d_pad), np.int32)
+    for i, (l, pairs) in enumerate(sorted(new_demand_rows.items())):
+        host.demand[l] = pairs
+        d_lvl[i] = l
+        d_dst[i] = cap
+        d_src[i] = cap
+        if pairs:
+            arr = np.asarray(pairs, np.int64)
+            d_dst[i, : len(pairs)] = arr[:, 0]
+            d_src[i, : len(pairs)] = arr[:, 1]
+    ck = 32 * 4 ** cls_idx
+    dec_idx = _OOB + np.arange(ck, dtype=np.int32)
+    dec_val = np.zeros(ck, np.int32)
+    dec_idx[: len(decs)] = decs
+    if decs:
+        dec_val[: len(decs)] = host.decision[decs].astype(np.int32)
+    wk = 8 * 4 ** cls_idx
+    w_row = _OOB + np.arange(wk, dtype=np.int32)
+    w_node = np.zeros(wk, np.int32)
+    w_row[:n_new] = np.arange(first_new_row, len(plan.writer_node))
+    w_node[:n_new] = plan.writer_node[first_new_row:]
+    prog: PatchProgram = jax.device_put(PatchProgram(
+        push=host.push.drain_patch(cap, cls_idx, cls_row),
+        pull=host.pull.drain_patch(cap, cls_idx, cls_row),
+        dec_idx=dec_idx, dec_val=dec_val, w_row=w_row, w_node=w_node,
+        d_lvl=d_lvl, d_dst=d_dst, d_src=d_src))
+    plan.arrays = apply_patch_step(meta, plan.arrays, prog)
 
     # ---------------------------------------------- phase E: plan metadata
     plan.depth = depth
@@ -617,9 +843,10 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     plan.n_pull_edges = host.pull.n_edges()
     plan.patches_applied += 1
     _apply_base_maps(plan, host, delta)
-    stats["slot_levels"] = len(set(pend["push"]) | set(pend["pull"]))
-    stats["demand_levels"] = len(new_demand_rows)
-    return PatchResult(plan, False, None, None, retired_rows, stats)
+    if host.auto_verify:
+        host.verify_device(plan)
+    return PatchResult(plan, False, None, None, retired_rows, stats,
+                       program=prog)
 
 
 def _apply_base_maps(plan: ExecPlan, host: PlanHost,
@@ -657,6 +884,7 @@ def _recompile(plan: ExecPlan, host: PlanHost,
     pad = grow_pad(measure_plan(ov, dec), growth)
     new = compile_plan(ov, dec, backend=plan.meta.backend, pad=pad)
     new.patches_applied = plan.patches_applied
-    new.host = PlanHost.from_plan(new, ov)
+    new.host = PlanHost.from_plan(new, ov, mirror=host.track_mirror)
+    new.host.auto_verify = host.auto_verify
     new.host.retired_writer_bases = set(host.retired_writer_bases)
     return new, ov

@@ -220,7 +220,9 @@ def pad_window_rows(state: WindowState, n_rows: int) -> WindowState:
 def reset_window_rows(state: WindowState, rows) -> WindowState:
     """Zero the given writer rows (retired writers: their content leaves every
     window immediately, per §3.3 node deletion)."""
-    rows = jnp.asarray(np.asarray(rows, dtype=np.int32))
+    # explicit placement: the structural-patch path asserts zero *implicit*
+    # host->device transfers (jax.transfer_guard) during in-capacity churn
+    rows = jax.device_put(np.asarray(rows, dtype=np.int32))
     return WindowState(
         values=state.values.at[rows].set(0.0),
         stamps=state.stamps.at[rows].set(-jnp.inf),

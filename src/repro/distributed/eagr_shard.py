@@ -323,7 +323,9 @@ class ShardedDynamic:
             if host is not None:
                 for b in host.retired_writer_bases:
                     new.writer_row_of_base.pop(b, None)
-                new.host = PlanHost.from_plan(new, ov)
+                new.host = PlanHost.from_plan(new, ov,
+                                              mirror=host.track_mirror)
+                new.host.auto_verify = host.auto_verify
                 new.host.retired_writer_bases = set(host.retired_writer_bases)
             new.patches_applied = p.patches_applied
             if self.engines is not None:

@@ -21,9 +21,12 @@ On a mesh of >= n_shards devices the body runs under ``shard_map``; with
 fewer devices (CPU tier-1) the same body runs under
 ``vmap(axis_name=SHARD_AXIS)``, so both paths trace the same collectives.
 
-What stays host-side: delta journaling (``ShardedDynamic``), plan patching
-(one slice of the stacked pytree per shard delta), and owner-map rebuilds
-after structural churn.
+Structural churn is device-resident too: a shard's delta is lowered once
+(``plan_patch.PatchProgram``) and replayed on the owning slice of the stacked
+pytree under the same shard_map/vmap machinery (``_stacked_patch`` — masked,
+donated, no host scatter), and owner-map rows are patched in place
+(``_scatter_owner_rows``). What stays host-side: delta journaling
+(``ShardedDynamic``) and the slot-pool bookkeeping inside ``plan_patch``.
 """
 from __future__ import annotations
 
@@ -40,13 +43,13 @@ from repro.core.aggregates import Aggregate
 from repro.core.engine import (
     EngineState,
     _refresh_pao,
-    place_plan_arrays,
     plan_arrays_shard,
     read_step,
     stack_plan_arrays,
     write_step_extremal,
     write_step_sum,
 )
+from repro.core.plan_patch import _OOB, _bucket, apply_patch_program
 from repro.core.window import (
     WindowSpec,
     init_windows,
@@ -136,6 +139,42 @@ def _stacked_read(meta, agg, mesh, arrays, state, rmap, ids, valid):
 
     out = _run_stacked(mesh, body, (arrays, state, rmap, ids, valid))
     return out[0]  # replicated across the shard axis
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _stacked_patch(mesh, arrays, prog, flags):
+    """Patch ONE shard's slice of the stacked ``PlanArrays`` pytree entirely
+    on device: every shard runs the same lowered ``PatchProgram`` body
+    (``plan_patch.apply_patch_program``) over its own slice, and the per-shard
+    flag keeps only the owning shard's patched tables — the stack is donated,
+    so churn on shard k rewrites the tables in place with no host scatter and
+    no desync of the mesh. One cache entry per (mesh, program-bucket)."""
+    def body(arrays, prog, flag):
+        patched = apply_patch_program(arrays, prog)
+        return jax.tree.map(lambda p, o: jnp.where(flag, p, o),
+                            patched, arrays)
+
+    if mesh is None:
+        return jax.vmap(body, in_axes=(0, None, 0),
+                        axis_name=SHARD_AXIS)(arrays, prog, flags)
+
+    def dev_body(arrays, prog, flag):
+        out = body(jax.tree.map(lambda x: x[0], arrays), prog, flag[0])
+        return jax.tree.map(lambda x: x[None], out)
+
+    arr_specs = jax.tree.map(lambda _: P(SHARD_AXIS), arrays)
+    prog_specs = jax.tree.map(lambda _: P(), prog)
+    return shard_map(dev_body, mesh=mesh,
+                     in_specs=(arr_specs, prog_specs, P(SHARD_AXIS)),
+                     out_specs=P(SHARD_AXIS),
+                     check_rep=False)(arrays, prog, flags)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_owner_rows(m, shard, base, val):
+    """Rewrite individual (shard, base-id) owner-map entries in place;
+    shape-bucket padding carries an out-of-bounds base id and is dropped."""
+    return m.at[shard, base].set(val, mode="drop")
 
 
 # ----------------------------------------------------------------------- API
@@ -302,12 +341,17 @@ class StackedShardedEngine:
     # ----------------------------------------------------- structural updates
     def apply_delta(self, s: int, delta, *, growth: float = 2.0):
         """Patch shard ``s``'s plan (§3.3) and, when the patch stayed within
-        capacity, swap exactly that slice of the stacked pytree — the other
-        shards' tables, windows and PAOs are untouched and every stacked
-        program keeps its trace. A growth fallback defers to ``restack``."""
+        capacity, replay the SAME lowered ``PatchProgram`` on exactly that
+        slice of the stacked pytree (``_stacked_patch``, masked + donated) —
+        the other shards' tables, windows and PAOs are untouched, no table
+        travels through the host, and every stacked program keeps its trace.
+        Owner-map rows are scattered in place the same way. A growth fallback
+        defers to ``restack``."""
         from repro.core.plan_patch import patch_plan
 
         plan = self.sharded.shard_plans[s]
+        wm_before = dict(plan.writer_row_of_base)
+        rm_before = dict(plan.reader_node_of_base)
         res = patch_plan(plan, delta, overlay=self.sharded.shards[s],
                          growth=growth)
         if res.reason == "empty delta":
@@ -320,11 +364,53 @@ class StackedShardedEngine:
             self._pending_retired[s] = list(res.retired_writer_rows)
             self._needs_restack = True
             return res
-        self.arrays = self._commit(
-            place_plan_arrays(self.arrays, s, res.plan.arrays))
+        flags = np.zeros(self.n_shards, bool)
+        flags[s] = True
+        self.arrays = self._commit(_stacked_patch(
+            self.mesh, self.arrays, res.program, jax.device_put(flags)))
         self._refresh_shard_state(s, res.retired_writer_rows)
-        self.refresh_owner_maps()  # the patch may have moved base-id maps
+        self._patch_owner_maps(s, wm_before, rm_before, res.plan)
         return res
+
+    def _patch_owner_maps(self, s: int, wm_before: dict, rm_before: dict,
+                          plan) -> None:
+        """Scatter only shard ``s``'s changed owner-map rows (base id ->
+        writer row / reader node) instead of rebuilding + re-uploading the
+        whole (S, base_cap) maps per delta. A base id past the current
+        capacity bucket falls back to the full rebuild (a traced-shape
+        growth, so the stacked programs retrace once at the crossing)."""
+        wm, rm = plan.writer_row_of_base, plan.reader_node_of_base
+        w_edits = [(b, r) for b, r in wm.items() if wm_before.get(b) != r]
+        w_edits += [(b, -1) for b in wm_before if b not in wm]
+        r_edits = [(b, n) for b, n in rm.items() if rm_before.get(b) != n]
+        r_edits += [(b, -1) for b in rm_before if b not in rm]
+        if not (w_edits or r_edits):
+            return
+        if max(b for b, _ in w_edits + r_edits) >= self._base_cap:
+            self.refresh_owner_maps()
+            return
+        for b, n in r_edits:
+            if n >= 0:
+                self._reader_owner[int(b)] = s
+            elif self._reader_owner.get(int(b)) == s:
+                # only the still-owning shard may unregister: a reader that
+                # MOVED shards may have been claimed by its new home already
+                self._reader_owner.pop(int(b), None)
+        if w_edits:
+            self.writer_map = self._commit(
+                self._scatter_map_edits(self.writer_map, s, w_edits))
+        if r_edits:
+            self.reader_map = self._commit(
+                self._scatter_map_edits(self.reader_map, s, r_edits))
+
+    def _scatter_map_edits(self, m, s: int, edits: list):
+        k = _bucket(len(edits), 16)
+        base = np.full(k, _OOB, np.int32)
+        val = np.zeros(k, np.int32)
+        for i, (b, v) in enumerate(edits):
+            base[i], val[i] = b, v
+        shard = np.full(k, s, np.int32)
+        return _scatter_owner_rows(m, *jax.device_put((shard, base, val)))
 
     def _refresh_shard_state(self, s: int, retired_rows) -> None:
         """Migrate one shard's window/PAO slice after an in-capacity patch:

@@ -184,6 +184,11 @@ def patch_level(seg: jnp.ndarray, src: jnp.ndarray, sign: jnp.ndarray,
     every backend drops it); a new edge claims a free slot inside the owning
     tile's block range. Padded dims are untouched, so a jitted program over
     the tables keeps its compiled shape. Returns the three updated tables.
+
+    ``scatter_slots`` / ``scatter_rows`` below are the jit-embeddable
+    generalizations (batched across levels, out-of-bounds indices dropped)
+    that ``plan_patch.apply_patch_step`` composes into the device-resident
+    update program.
     """
     sl = jnp.asarray(np.asarray(slots, dtype=np.int64))
     return (
@@ -191,6 +196,40 @@ def patch_level(seg: jnp.ndarray, src: jnp.ndarray, sign: jnp.ndarray,
         src.at[level, sl].set(jnp.asarray(np.asarray(src_vals, np.int32))),
         sign.at[level, sl].set(jnp.asarray(np.asarray(sign_vals, np.float32))),
     )
+
+
+def scatter_slots(table: jnp.ndarray, lvl: jnp.ndarray, slot: jnp.ndarray,
+                  vals: jnp.ndarray) -> jnp.ndarray:
+    """Scatter individual (level, column) edits into one stacked (L, X)
+    table. Padding entries carry an out-of-bounds level and are dropped, so
+    edit arrays can be shape-bucketed without masking. Edits are unique by
+    construction (last-write-wins resolution happens at lowering time).
+    Traceable (jit-safe)."""
+    return table.at[lvl, slot].set(vals, mode="drop", unique_indices=True)
+
+
+def scatter_rows(table: jnp.ndarray, lvl: jnp.ndarray,
+                 rows: jnp.ndarray) -> jnp.ndarray:
+    """Replace whole level rows of a stacked table (the relayout tier).
+    Out-of-bounds ``lvl`` entries (shape-bucket padding) are dropped."""
+    return table.at[lvl].set(rows, mode="drop", unique_indices=True)
+
+
+def tile_occupancy(seg: jnp.ndarray, tile_of_block: jnp.ndarray,
+                   n_row_tiles: int) -> jnp.ndarray:
+    """Per-(level, row-tile) count of live edge slots, computed on device from
+    the stacked tables: the occupancy counters the patch path's tier
+    escalation mirrors host-side (a tile whose occupancy plus the incoming
+    claim exceeds its slot range forces a level relayout)."""
+    L, e_pad = seg.shape
+    tob = jnp.repeat(tile_of_block, E_BLK, axis=1)         # (L, e_pad)
+
+    def one_level(seg_row, tob_row):
+        t = jnp.where(seg_row >= 0, tob_row, n_row_tiles)
+        return jax.ops.segment_sum(jnp.ones((e_pad,), jnp.int32), t,
+                                   num_segments=n_row_tiles + 1)[:n_row_tiles]
+
+    return jax.vmap(one_level)(seg, tob)
 
 
 def relayout_level(dst: np.ndarray, src: np.ndarray, sign: np.ndarray,

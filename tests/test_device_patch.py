@@ -1,0 +1,244 @@
+"""Device-resident plan patching (the ``PatchProgram`` path, §3.3 on TPU
+terms): in-capacity churn must perform ZERO host->device table uploads — the
+delta is lowered to bucketed edit arrays and applied by one donated jitted
+``apply_patch_step`` — with the host mirror demoted to a parity oracle that,
+when enabled, must stay bit-identical to the device tables. The stacked
+deployment replays the same program on one masked slice without leaving the
+device.
+
+These tests build engines on the *default* backend (no explicit pin) so the
+CI matrix entry ``EAGR_BACKEND=pallas`` drives the whole path — device
+scatters included — through the segment_agg kernel in interpret mode.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import make_freqs
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import EagrEngine
+from repro.core.plan_patch import apply_patch_step
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.kernels.segment_agg.ops import tile_occupancy
+
+
+def _system(n=120, e=700, seed=3, agg="sum", spec=None, headroom=2.0,
+            rng_seed=1):
+    g = rmat_graph(n, e, seed=seed)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    ris = bp.reader_input_sets()
+    dyn = DynamicOverlay.from_overlay(ov, ris)
+    ov0 = dyn.to_overlay(prune=False)
+    wf, rf = make_freqs(n, seed=rng_seed)
+    dec, _ = D.decide_mincut(ov0, wf, rf, D.cost_model_for(agg))
+    eng = EagrEngine(ov0, dec, make_aggregate(agg),
+                     spec or WindowSpec("tuple", 4), headroom=headroom)
+    return eng, dyn, bp
+
+
+def _check_reads(eng, dyn, rng, k=6, batch=8):
+    pool = [r for r in dyn.reader_inputs
+            if dyn.reader_inputs[r] and r in eng.plan.reader_node_of_base]
+    q = rng.choice(pool, k)
+    out = eng.read_batch(q, batch_size=batch)
+    for i, b in enumerate(q):
+        want = eng.oracle_read(int(b), dyn.reader_inputs)
+        np.testing.assert_allclose(np.ravel(out[i]), np.ravel(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"reader {b}")
+
+
+def _churn_step(dyn, rng, readers, n_base=120):
+    op = int(rng.integers(0, 4))
+    if op == 0:
+        dyn.add_edge(int(rng.integers(0, n_base)), int(rng.choice(readers)))
+    elif op == 1:
+        r = int(rng.choice(readers))
+        if dyn.reader_inputs.get(r):
+            dyn.delete_edge(int(next(iter(dyn.reader_inputs[r]))), r)
+    elif op == 2:
+        nid = int(rng.integers(1000, 2000))
+        dyn.add_node(nid,
+                     in_neighbors={int(x) for x in rng.integers(0, n_base, 3)},
+                     out_readers={int(rng.choice(readers))})
+    else:
+        victims = [k for k in list(dyn.reader_inputs) if k >= 1000]
+        if victims:
+            dyn.delete_node(int(rng.choice(victims)))
+
+
+# ----------------------------------------------------------- zero table uploads
+def test_zero_host_uploads_during_in_capacity_churn():
+    """The acceptance invariant of device-resident patching: once the patch
+    machinery is warm, in-capacity churn performs NO implicit host->device
+    transfer — tables never re-upload; only the explicitly-placed
+    (``jax.device_put``) edit arrays of the ``PatchProgram`` travel."""
+    eng, dyn, bp = _system(headroom=2.0)
+    rng = np.random.default_rng(5)
+    readers = list(dyn.reader_inputs)
+    eng.write_batch(rng.choice(bp.writers, 16),
+                    rng.normal(size=16).astype(np.float32), batch_size=16)
+    # warm every patch-path program once: slot claim, retire, node add with a
+    # fresh writer row, node retire (window-row reset)
+    dyn.add_edge(int(bp.writers[0]), int(readers[0]))
+    eng.apply_delta(dyn.drain_delta())
+    dyn.delete_edge(int(bp.writers[0]), int(readers[0]))
+    eng.apply_delta(dyn.drain_delta())
+    dyn.add_node(1900, in_neighbors={int(bp.writers[0])},
+                 out_readers={int(readers[0])})
+    eng.apply_delta(dyn.drain_delta())
+    dyn.delete_node(1900)
+    eng.apply_delta(dyn.drain_delta())
+
+    with jax.transfer_guard_host_to_device("disallow"):
+        for step in range(12):
+            _churn_step(dyn, rng, readers)
+            res = eng.apply_delta(dyn.drain_delta())
+            assert not res.recompiled, "churn exceeded headroom"
+    eng.write_batch(rng.choice(bp.writers, 16),
+                    rng.normal(size=16).astype(np.float32), batch_size=16)
+    _check_reads(eng, dyn, rng)
+
+
+def test_apply_patch_step_single_trace_and_donation():
+    """Small in-capacity bursts stay on exactly ONE cached apply_patch_step
+    executable, and the donated input pytree is actually consumed (tables are
+    rewritten in place, not copied)."""
+    eng, dyn, bp = _system(headroom=2.0)
+    rng = np.random.default_rng(3)
+    readers = list(dyn.reader_inputs)
+    dyn.add_edge(int(bp.writers[0]), int(readers[0]))
+    eng.apply_delta(dyn.drain_delta())
+    c0 = apply_patch_step._cache_size()
+    old_arrays = eng.plan.arrays
+    for _ in range(8):
+        dyn.add_edge(int(rng.integers(0, 120)), int(rng.choice(readers)))
+        res = eng.apply_delta(dyn.drain_delta())
+        if res.reason == "empty delta":  # already-present edge: no-op add
+            continue
+        assert not res.recompiled and res.program is not None
+    assert apply_patch_step._cache_size() == c0, \
+        "uniform slot churn must stay on one apply_patch_step trace"
+    # the pre-patch buffers were donated into the step
+    assert old_arrays.push.seg.is_deleted()
+    eng.write_batch(rng.choice(bp.writers, 16),
+                    rng.normal(size=16).astype(np.float32), batch_size=16)
+    _check_reads(eng, dyn, rng)
+
+
+# ------------------------------------------------------------- parity oracle
+def _parity_sweep(seed: int, steps: int = 12) -> None:
+    eng, dyn, bp = _system(n=100, e=550, seed=seed % 7, headroom=2.5,
+                           rng_seed=seed % 5)
+    rng = np.random.default_rng(seed)
+    readers = list(dyn.reader_inputs)
+    eng.write_batch(rng.choice(bp.writers, 12),
+                    rng.normal(size=12).astype(np.float32), batch_size=12)
+    dyn.add_edge(int(bp.writers[0]), int(readers[0]))
+    eng.apply_delta(dyn.drain_delta())   # seeds the host bookkeeping
+    eng.plan.host.enable_mirror(eng.plan)
+    for _ in range(steps):
+        _churn_step(dyn, rng, readers, n_base=100)
+        eng.apply_delta(dyn.drain_delta())
+        # bit-identical PlanArrays after every random add/retire/flip burst
+        eng.plan.host.verify_device(eng.plan)
+        eng.write_batch(rng.choice(bp.writers, 12),
+                        rng.normal(size=12).astype(np.float32), batch_size=12)
+    _check_reads(eng, dyn, rng, k=4, batch=4)
+
+
+@pytest.mark.parametrize("seed", [0, 11])
+def test_device_patch_bit_identical_to_mirror(seed):
+    """Deterministic parity sweep: the device tables a PatchProgram produces
+    equal the host parity mirror bit for bit after every churn burst."""
+    _parity_sweep(seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_device_patch_parity(seed):
+    """Hypothesis sweep over random add/retire/flip sequences — including
+    level relayouts and recompile fallbacks — asserting host/device parity
+    after every burst."""
+    _parity_sweep(seed, steps=10)
+
+
+def test_tile_occupancy_matches_host_counters():
+    """The host tier-escalation counters mirror ``ops.tile_occupancy``
+    computed on device from the live tables."""
+    eng, dyn, bp = _system(headroom=2.0)
+    rng = np.random.default_rng(1)
+    readers = list(dyn.reader_inputs)
+    for _ in range(8):
+        _churn_step(dyn, rng, readers)
+        eng.apply_delta(dyn.drain_delta())
+    host = eng.plan.host
+    meta = eng.plan.meta
+    for name in ("push", "pull"):
+        t = getattr(eng.plan.arrays, name)
+        dev = np.asarray(tile_occupancy(t.seg, t.tile_of_block,
+                                        meta.n_row_tiles))
+        np.testing.assert_array_equal(dev, getattr(host, name).occ,
+                                      err_msg=f"{name} occupancy diverged")
+
+
+# ------------------------------------------------------------- stacked slices
+def test_stacked_slice_patch_stays_device_resident():
+    """Stacked churn replays the shard's PatchProgram on the stacked pytree:
+    the patched slice must equal the per-shard plan arrays bit for bit, the
+    incrementally-scattered owner maps must equal a full rebuild, and uniform
+    bursts stay on one stacked patch trace."""
+    from repro.distributed.eagr_shard import ShardedDynamic, partition_overlay
+    from repro.distributed.stacked import StackedShardedEngine, _stacked_patch
+
+    g = rmat_graph(150, 900, seed=3)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=2, seed=0)
+    wf, rf = make_freqs(150, seed=3)
+    dec, _ = D.decide_mincut(ov, wf, rf, D.cost_model_for("sum"))
+    sharded = partition_overlay(ov, dec, n_shards=4, seed=0, headroom=2.0)
+    stacked = StackedShardedEngine(sharded, make_aggregate("sum"),
+                                   WindowSpec("tuple", 4), base_capacity=2048)
+    sd = ShardedDynamic(sharded, stacked)
+    rng = np.random.default_rng(2)
+    ris = bp.reader_input_sets()
+
+    def write():
+        ids = rng.choice(bp.writers, 48)
+        stacked.write_batch(ids, rng.normal(size=48).astype(np.float32),
+                            batch_size=48)
+
+    write()
+    sd.add_edge(int(rng.integers(0, 150)), int(rng.choice(list(ris))))
+    sd.apply()  # warm the stacked patch program
+    c0 = _stacked_patch._cache_size()
+    recompiles = 0
+    for _ in range(10):
+        sd.add_edge(int(rng.integers(0, 150)), int(rng.choice(list(ris))))
+        res = sd.apply()
+        recompiles += sum(bool(x and x.recompiled) for x in res)
+        write()
+    assert recompiles == 0
+    assert _stacked_patch._cache_size() == c0, \
+        "uniform stacked churn must stay on one patch trace"
+    # every stacked slice equals its shard plan's own (donated-step) arrays
+    for s, p in enumerate(sharded.shard_plans):
+        got = jax.tree.leaves(jax.tree.map(lambda x: x[s], stacked.arrays))
+        want = jax.tree.leaves(p.arrays)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # incrementally-patched owner maps == a from-scratch rebuild
+    wmap_inc = np.asarray(stacked.writer_map).copy()
+    rmap_inc = np.asarray(stacked.reader_map).copy()
+    owner_inc = dict(stacked._reader_owner)
+    stacked.refresh_owner_maps()
+    np.testing.assert_array_equal(wmap_inc, np.asarray(stacked.writer_map))
+    np.testing.assert_array_equal(rmap_inc, np.asarray(stacked.reader_map))
+    assert owner_inc == stacked._reader_owner

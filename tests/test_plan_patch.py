@@ -456,28 +456,30 @@ def test_extremal_touched_restriction_matches_always_run():
 
 
 # -------------------------------------------------------------- sharded path
-def test_sync_table_scatter_buckets_slot_counts():
-    """Device sync scatters are cache-keyed by a power-of-two slot-count
-    bucket: bursts touching 1..N slots must NOT compile one executable per
-    distinct count (the measured-45ms-each failure mode), and the patched
-    plan stays exact."""
-    from repro.core.plan_patch import _bucket_count, _scatter_slot_patch
+def test_patch_program_buckets_and_single_trace():
+    """The device patch program is cache-keyed by shape-bucketed edit counts:
+    bursts touching 1..N slots must NOT compile one executable per distinct
+    count (the measured-45ms-each failure mode) — slot-only churn stays on
+    ONE cached ``apply_patch_step`` trace — and the patched plan stays
+    exact."""
+    from repro.core.plan_patch import _bucket, apply_patch_step
 
-    assert _bucket_count(1) == 64
-    assert _bucket_count(64) == 64
-    assert _bucket_count(65) == 256
+    assert _bucket(1, 64) == 64
+    assert _bucket(64, 64) == 64
+    assert _bucket(65, 64) == 256
 
     eng, dyn, bp = _system(headroom=2.0)
     rng = np.random.default_rng(0)
     readers = [r for r in dyn.reader_inputs if dyn.reader_inputs[r]]
-    c0 = _scatter_slot_patch._cache_size()
+    c0 = apply_patch_step._cache_size()
     for k in range(6):  # bursts of 1..6 edge adds -> varying slot counts
         for _ in range(k + 1):
             dyn.add_edge(int(rng.integers(0, 120)), int(rng.choice(readers)))
         res = eng.apply_delta(dyn.drain_delta())
         assert not res.recompiled
-    assert _scatter_slot_patch._cache_size() - c0 <= 2, \
-        "slot scatter compiled per distinct count instead of per bucket"
+        assert res.program is not None
+    assert apply_patch_step._cache_size() - c0 <= 1, \
+        "patch program compiled per distinct edit count instead of per bucket"
     _check_reads(eng, dyn, rng)
 
 
