@@ -1,9 +1,14 @@
 """Continuous anomaly detection on a communication network (paper §1): keep
 every node's ego-centric COUNT of recent calls up to date as events stream
-in (a *continuous* query — all-push), and flag neighborhoods whose activity
-exceeds a z-score threshold. Includes an adaptive-dataflow phase change.
+in, and flag neighborhoods whose activity exceeds a z-score threshold.
+
+A *continuous* query needs always-fresh results, so the session pins it
+all-push (``Query(continuous=True)``) instead of cost-optimized push/pull —
+the paper's continuous class expressed as a query flag.
 
     PYTHONPATH=src python examples/anomaly_detection.py
+
+``EAGR_EXAMPLE_FAST=1`` shrinks the graph for CI smoke runs.
 """
 import os
 import sys
@@ -12,46 +17,40 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import dataflow as D
-from repro.core.aggregates import make_aggregate
-from repro.core.bipartite import build_bipartite
-from repro.core.engine import EagrEngine
-from repro.core.vnm import construct_vnm
-from repro.core.window import WindowSpec
-from repro.graphs.generators import rmat_graph
+from repro import EagrSession, Query, WindowSpec
 
+FAST = bool(os.environ.get("EAGR_EXAMPLE_FAST"))
+N, E = (600, 4800) if FAST else (2000, 16000)
 WINDOW = 32
 
-graph = rmat_graph(2000, 16000, seed=3)
-bp = build_bipartite(graph)
-overlay, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+from repro.graphs.generators import rmat_graph  # noqa: E402
 
-# continuous query => results must always be fresh => all-push decisions
-dec = np.full(overlay.n_nodes, D.PUSH)
-engine = EagrEngine(overlay, dec, make_aggregate("count"),
-                    WindowSpec("tuple", WINDOW))
+session = EagrSession(rmat_graph(N, E, seed=3))
+calls = session.register(Query(agg="count",
+                               window=WindowSpec("tuple", WINDOW),
+                               continuous=True))   # always fresh => all-push
 
 rng = np.random.default_rng(0)
-readers = np.array(list(bp.reader_inputs))
+readers = np.array(session.readers)
+writers = np.array(session.writers)
 
 # ---- phase 1: normal traffic establishes each node's OWN baseline
 # (ego-network sizes are power-law; a global z-score would be blind)
 for _ in range(12):
-    ids = rng.choice(bp.writers, 512)
-    engine.write_batch(ids, np.ones(512, np.float32))
-base = np.ravel(engine.read_batch(readers))
+    session.update(rng.choice(writers, 512))    # count streams need no values
+base = np.ravel(session.read(calls, readers))
 print(f"baseline ego-activity: mean={base.mean():.1f} max={base.max():.0f}")
 
 # ---- phase 2: a hot cluster floods calls (their windows saturate at cap)
-hot = rng.choice(bp.writers, 12, replace=False)
+hot = rng.choice(writers, 12, replace=False)
 for _ in range(12):
-    ids = np.concatenate([rng.choice(hot, 480), rng.choice(bp.writers, 32)])
-    engine.write_batch(ids, np.ones(512, np.float32))
-act = np.ravel(engine.read_batch(readers))
+    session.update(np.concatenate([rng.choice(hot, 480),
+                                   rng.choice(writers, 32)]))
+act = np.ravel(session.read(calls, readers))
 # per-node Poisson-style deviation score against its own baseline
 score = (act - base) / np.sqrt(base + 1.0)
 flagged = readers[score > 4.0]
-ris = bp.reader_input_sets()
+ris = session.bipartite.reader_input_sets()
 truly_hot = [r for r in flagged if set(map(int, hot)) & ris[int(r)]]
 print(f"flagged {len(flagged)} anomalous neighborhoods "
       f"(score > 4); {len(truly_hot)} contain a flooding caller")

@@ -1,13 +1,17 @@
 """Trend detection on a *growing* follower graph (paper §3.3 end to end):
-value updates, structural churn, and reads interleave on one live engine.
+value updates, structural churn, and reads interleave on one live session.
 
 New users join, follow edges appear and disappear, and accounts get deleted —
-each burst is journaled by ``DynamicOverlay``, drained as an ``OverlayDelta``,
-and applied to the running engine with ``apply_delta``: in-capacity bursts
-patch the compiled plan's tables in place (no recompile, no retrace), only a
-genuine capacity overflow falls back to ``compile_plan`` with growth headroom.
+each burst journals through the session (``add_edge``/``delete_edge``/
+``add_node``/``delete_node``) and lands on the live plan at ``flush()``
+through the device-resident patch path: in-capacity bursts rewrite the
+compiled plan's tables in place (no recompile, no retrace, zero table
+uploads); only a genuine capacity overflow falls back to a recompile with
+growth headroom.
 
     PYTHONPATH=src python examples/dynamic_graph.py
+
+``EAGR_EXAMPLE_FAST=1`` shrinks the graph/stream for CI smoke runs.
 """
 import os
 import sys
@@ -16,91 +20,81 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import dataflow as D
-from repro.core.aggregates import make_aggregate
-from repro.core.bipartite import build_bipartite
-from repro.core.dynamic import DynamicOverlay
-from repro.core.engine import EagrEngine
-from repro.core.vnm import construct_vnm
-from repro.core.window import WindowSpec
+from repro import EagrSession, Query, WindowSpec
 from repro.graphs.generators import rmat_graph
 
+FAST = bool(os.environ.get("EAGR_EXAMPLE_FAST"))
 N_TOPICS, K, WINDOW = 32, 3, 16
-N_USERS = 1500
+N_USERS, N_EDGES, STEPS = (500, 3000, 12) if FAST else (1500, 9000, 30)
 
-# ---- seed social graph + 1-hop friend neighborhoods
-graph = rmat_graph(N_USERS, 9000, seed=7, symmetric=True)
-bp = build_bipartite(graph)
-overlay, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
-ris = bp.reader_input_sets()
-dyn = DynamicOverlay.from_overlay(overlay, ris)
-# the patch path lives in the unpruned id space: builder node ids stay stable
-ov0 = dyn.to_overlay(prune=False)
+# ---- seed social graph; decisions tuned to zipf-skewed traffic
 rng = np.random.default_rng(1)
 wf = rng.zipf(1.6, N_USERS).clip(1, 1000).astype(np.float64)
 rf = wf[rng.permutation(N_USERS)]
-dec, _ = D.decide_mincut(ov0, wf, rf, D.cost_model_for("topk", window=WINDOW),
-                         window=WINDOW)
-agg = make_aggregate("topk", k=K, domain=N_TOPICS)
-engine = EagrEngine(ov0, dec, agg, WindowSpec("tuple", WINDOW), headroom=2.0)
-print(f"{N_USERS} users, {bp.n_edges} feed edges; plan "
-      f"levels={engine.plan.meta.n_levels} writers={engine.plan.meta.n_writers}")
+session = EagrSession(rmat_graph(N_USERS, N_EDGES, seed=7, symmetric=True),
+                      write_freq=wf, read_freq=rf, headroom=2.0)
+trends = session.register(Query(agg="topk",
+                                agg_kwargs={"k": K, "domain": N_TOPICS},
+                                window=WindowSpec("tuple", WINDOW)))
+eng = trends.group.engine   # one level down, for plan stats only
+print(f"{N_USERS} users, {session.bipartite.n_edges} feed edges; plan "
+      f"levels={eng.plan.meta.n_levels} writers={eng.plan.meta.n_writers}")
 
 # ---- stream: posts + churn + trend queries, all interleaved
-readers = list(ris)
+writers = np.array(session.writers)
+readers = list(session.readers)
 next_user = N_USERS
 n_posts = n_queries = n_patches = n_recompiles = 0
-for step in range(30):
+for step in range(STEPS):
     # value updates: a batch of posts (topic ids)
-    ids = rng.choice(bp.writers, 256)
-    topics = rng.integers(0, N_TOPICS, 256).astype(np.float32)
-    engine.write_batch(ids, topics, batch_size=256)
+    ids = rng.choice(writers, 256)
+    session.update(ids, rng.integers(0, N_TOPICS, 256).astype(np.float32))
     n_posts += len(ids)
 
     # structural churn: follows, unfollows, joins, account deletions
     for _ in range(4):
         kind = rng.random()
         if kind < 0.45:      # new follow edge
-            dyn.add_edge(int(rng.integers(0, N_USERS)), int(rng.choice(readers)))
+            session.add_edge(int(rng.integers(0, N_USERS)),
+                             int(rng.choice(readers)))
         elif kind < 0.70:    # unfollow
             r = int(rng.choice(readers))
-            if dyn.reader_inputs.get(r):
-                dyn.delete_edge(int(next(iter(dyn.reader_inputs[r]))), r)
+            ins = session.neighborhood(r)
+            if ins:
+                session.delete_edge(int(next(iter(ins))), r)
         elif kind < 0.90:    # new user joins, following a few accounts
-            dyn.add_node(next_user,
-                         in_neighbors={int(x) for x in rng.integers(0, N_USERS, 5)},
-                         out_readers={int(rng.choice(readers))})
+            session.add_node(
+                next_user,
+                in_neighbors={int(x) for x in rng.integers(0, N_USERS, 5)},
+                out_readers={int(rng.choice(readers))})
             next_user += 1
         else:                # an account added this run gets deleted
-            joined = [u for u in dyn.reader_inputs if u >= N_USERS]
+            joined = [u for u in session.readers if u >= N_USERS]
             if joined:
-                dyn.delete_node(int(rng.choice(joined)))
-    res = engine.apply_delta(dyn.drain_delta())
+                session.delete_node(int(rng.choice(joined)))
+    (res,) = session.flush()
     n_patches += 1
-    n_recompiles += bool(res.recompiled)
+    n_recompiles += bool(res and res.recompiled)
 
     # trend queries against the live (possibly just-patched) plan
-    q = rng.choice([r for r in dyn.reader_inputs
-                    if dyn.reader_inputs[r]
-                    and r in engine.plan.reader_node_of_base], 64)
-    engine.read_batch(q, batch_size=64)
+    q = rng.choice(session.readers, 64)
+    session.read(trends, q)
     n_queries += len(q)
 
 print(f"processed {n_posts} posts, {n_queries} trend queries, "
       f"{n_patches} structural bursts ({n_recompiles} recompile fallbacks, "
-      f"{engine.plan.patches_applied} in-place patches)")
+      f"{eng.plan.patches_applied} in-place patches)")
 
 # ---- verify a few users' trends against the window-level oracle
-sample = [r for r in dyn.reader_inputs
-          if dyn.reader_inputs[r] and r in engine.plan.reader_node_of_base][:5]
-trends = engine.read_batch(np.array(sample))
 from repro.core.window import window_pao  # noqa: E402
 
-wp = np.asarray(window_pao(engine.state.windows, engine.spec, agg))
-for u, t in zip(sample, np.asarray(trends)):
+sample = session.readers[:5]
+answers = session.read(trends, np.array(sample))
+wp = np.asarray(window_pao(eng.state.windows, eng.spec, eng.agg))
+for u, t in zip(sample, np.asarray(answers)):
     counts = np.zeros(N_TOPICS)
-    for w in dyn.reader_inputs[int(u)]:
-        row = engine.plan.writer_row_of_base.get(int(w))
+    for w in session.neighborhood(int(u)):
+        row = eng.plan.writer_row_of_base.get(int(w))
         if row is not None:
             counts += wp[row]
     assert counts[int(t[0])] == counts.max(), "top-1 mismatch vs oracle"

@@ -1,11 +1,15 @@
-"""Quickstart: the EAGr pipeline end to end on the paper's running example.
+"""Quickstart: EAGr end to end on the paper's running example.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds Figure 1(a)'s data graph, compiles an aggregation overlay, makes
-push/pull dataflow decisions with the max-flow algorithm, and streams
-writes/reads through the vectorized engine — reproducing the SUM results in
-Figure 1(b) exactly.
+Part 1 drives the public session API: one ``EagrSession`` owns overlay
+construction, cost-model decisions and engine assembly, and serves several
+simultaneous queries over Figure 1(a)'s data graph — reproducing the SUM
+results in Figure 1(b) exactly.
+
+Part 2 keeps the low-level substrate walkthrough (what the session assembles
+for you): ``build_bipartite -> construct_vnm -> decide_mincut -> EagrEngine``,
+for substrate users who need direct control of each stage.
 """
 import os
 import sys
@@ -14,18 +18,47 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import dataflow as D
-from repro.core.aggregates import make_aggregate
-from repro.core.bipartite import build_bipartite
-from repro.core.engine import EagrEngine
-from repro.core.vnm import construct_vnm
-from repro.core.window import WindowSpec
+from repro import EagrSession, Query, WindowSpec
 from repro.graphs.generators import small_example_graph
 
 NAMES = "abcdefg"
+EXPECTED = {"a": 19.0, "b": 19.0, "c": 16.0, "d": 15.0, "e": 18.0,
+            "f": 19.0, "g": 25.0}
 
-# ---- 1. data graph + query ⟨SUM, c=1, N(x) = {y | y -> x}, pred=V⟩ (paper §2.1)
+# ======================= Part 1: the session API ===========================
+# query ⟨SUM, c=1, N(x) = {y | y -> x}, pred=V⟩ (paper §2.1) in five lines
 graph = small_example_graph()
+session = EagrSession(graph)                       # overlay compiled once
+sums = session.register(Query(agg="sum", window=WindowSpec("tuple", 1)))
+counts = session.register(Query(agg="count"))      # shares the same overlay
+
+writes = {  # most recent write per node, per Figure 1(a)
+    "a": 4.0, "b": 2.0, "c": 9.0, "d": 3.0, "e": 1.0, "f": 6.0, "g": 7.0}
+session.update(np.array([NAMES.index(k) for k in writes]),
+               np.array(list(writes.values()), dtype=np.float32))
+
+answers = session.read(sums, np.arange(7))
+degrees = session.read(counts, np.arange(7))
+print("session API — two queries, one overlay "
+      f"({session.n_engine_groups} engine groups):")
+print("\n  node  SUM(N(v))  expected  COUNT(N(v))")
+ok = True
+for v in range(7):
+    got = float(np.ravel(answers[v])[0])
+    want = EXPECTED[NAMES[v]]
+    ok &= abs(got - want) < 1e-5
+    print(f"     {NAMES[v]}   {got:8.1f}  {want:8.1f}  {float(np.ravel(degrees[v])[0]):10.0f}")
+assert ok, "session SUM mismatch vs Figure 1(b)"
+print("\nPASS: session reproduces Figure 1(b)\n")
+
+# =================== Part 2: the low-level substrate =======================
+from repro.core import dataflow as D                       # noqa: E402
+from repro.core.aggregates import make_aggregate           # noqa: E402
+from repro.core.bipartite import build_bipartite           # noqa: E402
+from repro.core.engine import EagrEngine                   # noqa: E402
+from repro.core.vnm import construct_vnm                   # noqa: E402
+
+# ---- 1. bipartite writer/reader graph A_G (§3.1)
 bp = build_bipartite(graph)
 print(f"data graph: {graph.n_nodes} nodes, bipartite A_G: {bp.n_edges} edges")
 
@@ -46,21 +79,13 @@ print(f"decisions: {int((decisions == D.PUSH).sum())} push / "
 # ---- 4. stream the paper's Figure 1 writes; window c=1 keeps the last value
 engine = EagrEngine(overlay, decisions, make_aggregate("sum"),
                     WindowSpec("tuple", 1))
-writes = {  # most recent write per node, per Figure 1(a)
-    "a": 4.0, "b": 2.0, "c": 9.0, "d": 3.0, "e": 1.0, "f": 6.0, "g": 7.0}
 ids = np.array([NAMES.index(k) for k in writes])
 vals = np.array(list(writes.values()), dtype=np.float32)
 engine.write_batch(ids, vals)
 
 # ---- 5. read every node's ego-centric SUM; expect Figure 1(b)'s last column
-expected = {"a": 19.0, "b": 19.0, "c": 16.0, "d": 15.0, "e": 18.0,
-            "f": 19.0, "g": 25.0}
 answers = engine.read_batch(np.arange(7))
-print("\n  node  SUM(N(v))  expected")
-ok = True
-for v in range(7):
-    got = float(np.ravel(answers[v])[0])
-    want = expected[NAMES[v]]
-    ok &= abs(got - want) < 1e-5
-    print(f"     {NAMES[v]}   {got:8.1f}  {want:8.1f}")
-print("\nPASS: engine reproduces Figure 1(b)" if ok else "FAIL")
+ok = all(abs(float(np.ravel(answers[v])[0]) - EXPECTED[NAMES[v]]) < 1e-5
+         for v in range(7))
+assert ok, "low-level engine mismatch vs Figure 1(b)"
+print("PASS: hand-assembled engine reproduces Figure 1(b) too")

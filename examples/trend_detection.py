@@ -2,7 +2,13 @@
 user, maintain the TOP-K most frequent topics among their friends' recent
 posts — a quasi-continuous query served from partial pre-computation.
 
+The session owns the pipeline: overlay construction over the friendship
+graph, push/pull decisions tuned to the trace's write/read frequencies
+(``write_freq=``/``read_freq=``), and the engine behind one register call.
+
     PYTHONPATH=src python examples/trend_detection.py
+
+``EAGR_EXAMPLE_FAST=1`` shrinks the graph/trace for CI smoke runs.
 """
 import os
 import sys
@@ -11,57 +17,59 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import dataflow as D
-from repro.core.aggregates import make_aggregate
-from repro.core.bipartite import build_bipartite
-from repro.core.engine import EagrEngine
-from repro.core.vnm import construct_vnm
-from repro.core.window import WindowSpec
+from repro import EagrSession, Query, WindowSpec
 from repro.graphs.generators import rmat_graph
-from repro.streams.traces import generate_trace, batched_playback
+from repro.streams.traces import batched_playback, generate_trace
 
+FAST = bool(os.environ.get("EAGR_EXAMPLE_FAST"))
 N_TOPICS, K, WINDOW = 32, 3, 16
+N_USERS, N_EDGES, N_EVENTS = (800, 6400, 12_000) if FAST \
+    else (3000, 24000, 60_000)
 
-# ---- social graph + per-user friend neighborhoods
-graph = rmat_graph(3000, 24000, seed=7, symmetric=True)
+# ---- social graph + a posting/query trace to tune the dataflow against
+from repro import build_bipartite  # noqa: E402
+
+graph = rmat_graph(N_USERS, N_EDGES, seed=7, symmetric=True)
 bp = build_bipartite(graph)
-print(f"{graph.n_nodes} users, {bp.n_edges} friendship-feed edges")
-
-# ---- compile: overlay + dataflow decisions tuned to a read-light workload
-overlay, _ = construct_vnm(bp, variant="vnm_n", max_iterations=3, seed=0)
-overlay.validate(bp.reader_input_sets())
+writers = np.array(bp.writers)
 readers = np.array(list(bp.reader_inputs))
-trace = generate_trace(bp.writers, readers, 60_000, write_read_ratio=5.0,
+trace = generate_trace(writers, readers, N_EVENTS, write_read_ratio=5.0,
                        value_domain=N_TOPICS, seed=1, n_base=graph.n_nodes)
-dec, _ = D.decide_mincut(overlay, trace.write_freq, trace.read_freq,
-                         D.cost_model_for("topk", window=WINDOW), window=WINDOW)
-print(f"overlay SI={overlay.sharing_index(bp.n_edges):.3f}; "
-      f"{int((dec == D.PUSH).sum())} push / {int((dec == D.PULL).sum())} pull")
+
+# ---- the session: overlay once, decisions from the trace frequencies
+# (the session accepts the pre-built Bipartite, so A_G is built only once)
+session = EagrSession(bp, variant="vnm_n",
+                      write_freq=trace.write_freq, read_freq=trace.read_freq)
+trends = session.register(Query(agg="topk",
+                                agg_kwargs={"k": K, "domain": N_TOPICS},
+                                window=WindowSpec("tuple", WINDOW)))
+eng = trends.group.engine   # one level down, for stats + the oracle check
+print(f"{graph.n_nodes} users, {session.bipartite.n_edges} feed edges; "
+      f"overlay SI="
+      f"{eng.overlay.sharing_index(session.bipartite.n_edges):.3f}")
 
 # ---- stream posts (topic ids) and serve trend queries
-agg = make_aggregate("topk", k=K, domain=N_TOPICS)
-engine = EagrEngine(overlay, dec, agg, WindowSpec("tuple", WINDOW))
 n_writes = n_reads = 0
 for kind, ids, vals in batched_playback(trace, 2048):
     if kind == "write":
-        engine.write_batch(ids, vals, batch_size=2048)
+        session.update(ids, vals)
         n_writes += len(ids)
     else:
-        answers = engine.read_batch(ids, batch_size=2048)
+        session.read(trends, ids)
         n_reads += len(ids)
 print(f"processed {n_writes} posts, served {n_reads} trend queries")
 
 # ---- show a few users' personalized trends + verify against the oracle
-from repro.core.window import window_pao
+from repro.core.window import window_pao  # noqa: E402
 
 sample = readers[:5]
-trends = engine.read_batch(sample)
-ris = bp.reader_input_sets()
-wp = np.asarray(window_pao(engine.state.windows, engine.spec, agg))
-for u, t in zip(sample, np.asarray(trends)):
+answers = session.read(trends, sample)
+ris = session.bipartite.reader_input_sets()
+wp = np.asarray(window_pao(eng.state.windows, eng.spec, eng.agg))
+for u, t in zip(sample, np.asarray(answers)):
     counts = np.zeros(N_TOPICS)
     for w in ris[int(u)]:
-        counts += wp[engine.plan.writer_row_of_base[w]]
+        counts += wp[eng.plan.writer_row_of_base[w]]
     assert counts[int(t[0])] == counts.max(), "top-1 mismatch vs oracle"
     print(f"user {int(u):5d}: trending topics {t.tolist()} "
           f"(counts {[int(counts[i]) for i in t]})")

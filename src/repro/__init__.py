@@ -1,0 +1,59 @@
+"""EAGr reproduction — continuous ego-centric aggregate queries over large
+dynamic graphs, on a JAX/Pallas execution substrate.
+
+Public surface:
+
+  * :class:`EagrSession` / :class:`Query` / :class:`QueryHandle` — the
+    declarative front door (``repro.session``): one session owns overlay
+    construction, cost-model decisions, engine grouping and churn journaling
+    for any number of simultaneous queries, single-machine or sharded.
+  * :class:`WindowSpec`, :func:`make_aggregate` / :class:`Aggregate` — query
+    building blocks.
+  * The low-level tier stays public for substrate users: ``EagrEngine``,
+    ``DynamicOverlay``, ``partition_overlay`` / ``StackedShardedEngine`` /
+    ``ShardedDynamic``, ``build_bipartite``, ``construct_vnm``.
+
+Exports resolve lazily (PEP 562) so ``import repro`` stays cheap and config
+subpackages avoid pulling the whole engine stack.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "EagrSession": "repro.session",
+    "Query": "repro.session",
+    "QueryHandle": "repro.session",
+    "WindowSpec": "repro.core.window",
+    "Aggregate": "repro.core.aggregates",
+    "make_aggregate": "repro.core.aggregates",
+    "EagrEngine": "repro.core.engine",
+    "compile_plan": "repro.core.engine",
+    "DynamicOverlay": "repro.core.dynamic",
+    "Overlay": "repro.core.overlay",
+    "build_bipartite": "repro.core.bipartite",
+    "Bipartite": "repro.core.bipartite",
+    "construct_vnm": "repro.core.vnm",
+    "decide_mincut": "repro.core.dataflow",
+    "cost_model_for": "repro.core.dataflow",
+    "partition_overlay": "repro.distributed.eagr_shard",
+    "ShardedDynamic": "repro.distributed.eagr_shard",
+    "StackedShardedEngine": "repro.distributed.stacked",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

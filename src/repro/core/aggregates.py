@@ -49,6 +49,9 @@ class Aggregate:
     finalize: Callable[[jnp.ndarray], jnp.ndarray]      # (..., pao_dim) -> answer
     dup_insensitive: bool = False
     supports_subtraction: bool = False
+    value_dim: int = 1                # raw write arity lift consumes: scalar
+                                      # streams = 1, vector payloads match
+                                      # WindowSpec(value_dim=...)
     cache_key: tuple | None = None
 
     def __eq__(self, other):
@@ -122,6 +125,7 @@ def sum_aggregate(value_dim: int = 1) -> Aggregate:
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         supports_subtraction=True,
+        value_dim=value_dim,
     )
 
 
@@ -151,6 +155,7 @@ def max_aggregate(value_dim: int = 1) -> Aggregate:
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         dup_insensitive=True,
+        value_dim=value_dim,
     )
 
 
@@ -161,6 +166,7 @@ def min_aggregate(value_dim: int = 1) -> Aggregate:
         lift=lambda v: v.reshape(v.shape[0], -1).astype(jnp.float32),
         finalize=lambda p: p,
         dup_insensitive=True,
+        value_dim=value_dim,
     )
 
 
@@ -193,8 +199,28 @@ BUILTINS: dict[str, Callable[..., Aggregate]] = {
 }
 
 
-def make_aggregate(name: str, **kwargs) -> Aggregate:
+def make_aggregate(name: "str | Aggregate", **kwargs) -> Aggregate:
+    """Resolve an aggregate by name (case/hyphen-insensitive: 'TOP-K' ->
+    'topk'). An ``Aggregate`` instance passes through unchanged so APIs can
+    accept either form. Unknown or non-string names raise a ``ValueError``
+    naming the valid set; bad constructor kwargs raise a ``ValueError``
+    naming the aggregate and its signature."""
+    if isinstance(name, Aggregate):
+        if kwargs:
+            raise ValueError(
+                f"aggregate {name.name!r} is already constructed; "
+                f"constructor kwargs {sorted(kwargs)} cannot be applied")
+        return name
+    if not isinstance(name, str):
+        raise ValueError(f"aggregate name must be a string or Aggregate, "
+                         f"got {type(name).__name__}; "
+                         f"built-ins: {sorted(BUILTINS)}")
     try:
-        return BUILTINS[name.lower().replace("-", "")](**kwargs)
+        ctor = BUILTINS[name.strip().lower().replace("-", "").replace("_", "")]
     except KeyError:
-        raise ValueError(f"unknown aggregate {name!r}; built-ins: {sorted(BUILTINS)}") from None
+        raise ValueError(f"unknown aggregate {name!r}; "
+                         f"built-ins: {sorted(BUILTINS)}") from None
+    try:
+        return ctor(**kwargs)
+    except TypeError as e:
+        raise ValueError(f"bad arguments for aggregate {name!r}: {e}") from None

@@ -140,6 +140,31 @@ class DynamicOverlay:
         dyn.dup_insensitive = ov.dup_insensitive
         return dyn
 
+    def fork(self) -> "DynamicOverlay":
+        """Independent deep copy with the same node ids and the same internal
+        counters, starting with a clean mutation journal.
+
+        Two forks fed the same mutation sequence evolve identically (ids,
+        restructuring thresholds, cover order), so a session can keep one
+        journaling ``DynamicOverlay`` per engine group over a single overlay
+        construction: each group drains its own delta against its own plan
+        while all groups stay structurally in lockstep."""
+        b = IOBBuilder()
+        b.kinds = list(self.b.kinds)
+        b.origin = list(self.b.origin)
+        b.inputs = [list(ins) for ins in self.b.inputs]
+        b.members = [set(m) for m in self.b.members]
+        b.rev = {w: set(ns) for w, ns in self.b.rev.items()}
+        b.writer_node = dict(self.b.writer_node)
+        dyn = DynamicOverlay(
+            b, dict(self.reader_node),
+            {r: list(ws) for r, ws in self.neg_edges.items()},
+            {r: set(ws) for r, ws in self.reader_inputs.items()},
+            threshold=self.threshold, split_limit=self.split_limit)
+        dyn.dup_insensitive = self.dup_insensitive
+        dyn.direct_writer_count = dict(self.direct_writer_count)
+        return dyn
+
     # ------------------------------------------------------------ helpers
     def _upstream_nodes(self, node: int) -> set[int]:
         seen = set()

@@ -684,6 +684,28 @@ class EagrEngine:
         self._rebind()
         return res
 
+    def adopt_decisions(self, decisions: np.ndarray) -> "ExecPlan":
+        """Recompile the live plan with new push/pull decisions (§4.8
+        adaptive re-decision) and migrate engine state in place: the overlay
+        is unchanged, so writer rows keep their positions and the windows
+        survive untouched; PAOs are refreshed for the new push set. Padded
+        dims are floored at the current plan's, so when the new decisions fit
+        the existing table budget every jitted body keeps its compiled
+        program. Host patch bookkeeping (slot pools, retired-writer bases,
+        parity mirror) is re-seeded so structural churn keeps patching in
+        place afterwards. Returns the adopted plan."""
+        from repro.core.plan_patch import carry_plan_bookkeeping
+
+        host = self.plan.host
+        ov = host.export_overlay() if host is not None else self.overlay
+        new = compile_plan(ov, np.asarray(decisions, dtype=np.int64),
+                           backend=self.plan.meta.backend,
+                           pad=plan_dims(self.plan))
+        carry_plan_bookkeeping(new, self.plan, ov)
+        self.overlay = ov
+        self.adopt_plan(new)
+        return new
+
     def adopt_plan(self, plan: ExecPlan) -> None:
         """Swap in a structurally-equivalent recompiled plan (e.g. a shard
         realigned to a new shared program shape) and migrate engine state:

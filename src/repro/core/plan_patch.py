@@ -874,6 +874,25 @@ def _apply_base_maps(plan: ExecPlan, host: PlanHost,
         plan.writer_row_of_base.pop(b, None)
 
 
+def carry_plan_bookkeeping(new: ExecPlan, old: ExecPlan,
+                           overlay: Overlay) -> ExecPlan:
+    """Carry patch bookkeeping across a recompile of the same live plan (the
+    growth fallback, a shard realign, or a decision re-adoption): the patch
+    counter survives, retired writer rows stay retired (the unpruned overlay
+    keeps their lingering W nodes, so ``compile_plan`` re-registers them),
+    and — when the old plan had host state — the new plan gets a fresh
+    ``PlanHost`` with the parity mirror/verify flags preserved."""
+    new.patches_applied = old.patches_applied
+    host: PlanHost | None = old.host  # type: ignore[assignment]
+    if host is not None:
+        for b in host.retired_writer_bases:
+            new.writer_row_of_base.pop(b, None)
+        new.host = PlanHost.from_plan(new, overlay, mirror=host.track_mirror)
+        new.host.auto_verify = host.auto_verify
+        new.host.retired_writer_bases = set(host.retired_writer_bases)
+    return new
+
+
 def _recompile(plan: ExecPlan, host: PlanHost,
                growth: float) -> tuple[ExecPlan, Overlay]:
     """Capacity-overflow fallback: a fresh ``compile_plan`` over the host
@@ -883,8 +902,5 @@ def _recompile(plan: ExecPlan, host: PlanHost,
     dec = host.decision[: host.n_real].copy()
     pad = grow_pad(measure_plan(ov, dec), growth)
     new = compile_plan(ov, dec, backend=plan.meta.backend, pad=pad)
-    new.patches_applied = plan.patches_applied
-    new.host = PlanHost.from_plan(new, ov, mirror=host.track_mirror)
-    new.host.auto_verify = host.auto_verify
-    new.host.retired_writer_bases = set(host.retired_writer_bases)
+    carry_plan_bookkeeping(new, plan, ov)
     return new, ov

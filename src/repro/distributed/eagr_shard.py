@@ -299,12 +299,59 @@ class ShardedDynamic:
             self.stacked.restack()
         return results
 
+    def readopt_decisions(self, decisions: list[np.ndarray | None]) -> bool:
+        """Recompile shards whose push/pull decisions changed (§4.8 adaptive
+        re-decision over a partitioned deployment) and re-establish the
+        one-program-shape invariant. ``decisions[s]`` is the shard's new
+        decision vector over its *current* (host-mirror) overlay, or None to
+        keep the shard as-is. Padded dims are floored at the element-wise
+        maximum of every shard's current and re-measured dims, so unchanged
+        shards usually skip recompilation entirely. With a stacked engine the
+        whole stack re-adopts (``adopt_shard_plans``); host-loop engines adopt
+        per shard. Returns True if any shard was recompiled."""
+        from repro.core.plan_patch import carry_plan_bookkeeping
+
+        if all(d is None for d in decisions):
+            return False
+        plans = self.sharded.shard_plans
+        overlays = []
+        dims = [plan_dims(p) for p in plans]
+        for s, dec in enumerate(decisions):
+            host = plans[s].host
+            ov = host.export_overlay() if host is not None \
+                else self.sharded.shards[s]
+            overlays.append(ov)
+            if dec is not None:
+                dims.append(measure_plan(ov, np.asarray(dec, np.int64)))
+        target = PlanPad(**{f: max(getattr(d, f) for d in dims)
+                            for f in PlanPad.__dataclass_fields__})
+        changed = False
+        for s, dec in enumerate(decisions):
+            p = plans[s]
+            if dec is None and plan_dims(p) == target:
+                continue
+            dec = p.decision if dec is None else np.asarray(dec, np.int64)
+            new = compile_plan(overlays[s], dec, backend=p.meta.backend,
+                               pad=target)
+            carry_plan_bookkeeping(new, p, overlays[s])
+            plans[s] = new
+            self.sharded.shard_decisions[s] = dec
+            self.sharded.writer_rows[s] = new.writer_row_of_base
+            changed = True
+            if self.engines is not None:
+                self.engines[s].adopt_plan(new)
+            if self.stacked is not None:
+                self.stacked._needs_restack = True
+        if self.stacked is not None and self.stacked._needs_restack:
+            self.stacked.adopt_shard_plans()
+        return changed
+
     def ensure_aligned(self) -> bool:
         """Re-run the ``align_shard_plans`` dims check; recompile any shard
         whose padded dims diverged (a growth-headroom fallback) to the
         element-wise maximum so all shards share one program shape again.
         Returns True if a realign was needed."""
-        from repro.core.plan_patch import PlanHost
+        from repro.core.plan_patch import carry_plan_bookkeeping
 
         plans = self.sharded.shard_plans
         dims = [plan_dims(p) for p in plans]
@@ -320,14 +367,7 @@ class ShardedDynamic:
                 else self.sharded.shards[s]
             new = compile_plan(ov, p.decision, backend=p.meta.backend,
                                pad=target)
-            if host is not None:
-                for b in host.retired_writer_bases:
-                    new.writer_row_of_base.pop(b, None)
-                new.host = PlanHost.from_plan(new, ov,
-                                              mirror=host.track_mirror)
-                new.host.auto_verify = host.auto_verify
-                new.host.retired_writer_bases = set(host.retired_writer_bases)
-            new.patches_applied = p.patches_applied
+            carry_plan_bookkeeping(new, p, ov)
             if self.engines is not None:
                 self.engines[s].adopt_plan(new)
             # a stacked engine re-adopts every slice at once via restack()

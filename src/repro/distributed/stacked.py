@@ -433,6 +433,15 @@ class StackedShardedEngine:
         lev[s] = self._now_host
         self._last_eval_now = lev
 
+    def adopt_shard_plans(self) -> None:
+        """Public seam for externally replaced shard plans (a decision
+        re-adoption or an out-of-band realign): re-adopt the whole stack from
+        ``sharded.shard_plans``. The overlay structure is unchanged on this
+        path, so windows survive by position; arrays restack, PAO slices
+        refresh, owner maps rebuild."""
+        self._needs_restack = True
+        self.restack()
+
     def restack(self) -> None:
         """Re-adopt every shard plan after a stack-wide realignment (a growth
         fallback on any shard): new meta, re-stacked arrays, window rows

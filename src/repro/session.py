@@ -1,0 +1,552 @@
+"""``EagrSession`` — one declarative front door for continuous ego-centric
+aggregation (the paper's multi-query system surface).
+
+EAGr's pitch is *many* simultaneous ego-centric queries sharing one overlay's
+partial aggregates. The substrate beneath (PR 1-4) delivers that — shared
+compiled plans, in-place device patching, stacked SPMD shards — but reaching
+it meant hand-assembling ``build_bipartite -> construct_vnm ->
+cost_model_for/decide_mincut -> EagrEngine`` and choosing among four engine
+entry points. The session owns that pipeline:
+
+    session = EagrSession(graph)                       # overlay built once
+    trends  = session.register(Query(agg="topk", agg_kwargs={"k": 3},
+                                     window=WindowSpec("tuple", 16)))
+    session.update(writer_ids, topic_ids)              # one write stream
+    session.read(trends, user_ids)                     # per-query reads
+
+Queries registered with equal ``(aggregate, window, continuous)`` specs are
+grouped into one *engine group* — one set of push/pull decisions, one
+compiled plan, one window/PAO state — the paper's aggregate sharing expressed
+in the API. Distinct specs get their own group over the *same* overlay
+construction (the expensive VNM/IOB pass runs exactly once per session).
+
+Deployment shape is a constructor argument, not a different API:
+``EagrSession(graph)`` runs each group on an :class:`EagrEngine`;
+``EagrSession(graph, shards=N)`` stands up ``partition_overlay ->
+align_shard_plans -> StackedShardedEngine`` behind the same methods.
+
+Graph mutations (``add_edge``/``delete_edge``/``add_node``/``delete_node``)
+journal through each group's :class:`DynamicOverlay` (or per-shard
+``ShardedDynamic``) and land on the live plans on :meth:`flush` via the
+device-resident patch path (§3.3 / PR 4) — zero table uploads and one
+compiled program as long as churn stays inside headroom. ``update``/``read``
+auto-flush a pending journal so reads are never stale.
+
+Push/pull decisions are chosen per group by ``decide_mincut`` under the
+aggregate's cost model, using observed write/read frequencies when the
+session has seen traffic (uniform otherwise; ``write_freq=``/``read_freq=``
+pin them explicitly, ``Query(continuous=True)`` pins all-push freshness).
+With ``adapt_every=N``, every N update/read calls the session re-runs the
+§4.8 frontier adaptation against observed frequencies and re-adopts plans
+whose decisions flipped.
+
+The low-level tier (``EagrEngine``, ``DynamicOverlay``, ``partition_overlay``,
+``StackedShardedEngine``) stays public and unchanged underneath — the parity
+suite (``tests/test_session.py``) holds the session bit-identical to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.aggregates import Aggregate, make_aggregate
+from repro.core.bipartite import Bipartite, build_bipartite
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import EagrEngine
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+
+__all__ = ["Query", "QueryHandle", "EagrSession"]
+
+
+def bucket_batch(n: int, floor: int = 16) -> int:
+    """Power-of-two batch bucketing: varying user batch sizes land on a
+    handful of padded shapes, so the jitted write/read programs retrace at
+    most log2(max_batch) times per engine instead of once per distinct size."""
+    return max(floor, 1 << (max(1, int(n)) - 1).bit_length())
+
+
+# ------------------------------------------------------------------- queries
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """Declarative spec of one continuous ego-centric aggregate query.
+
+    ``agg`` is a built-in aggregate name (see ``aggregates.BUILTINS``) or a
+    constructed :class:`Aggregate`; ``agg_kwargs`` feed the built-in
+    constructor (e.g. ``{"k": 3, "domain": 64}`` for top-k). ``window``
+    defaults to the paper's ``c = 1`` last-value tuple window. ``readers``
+    optionally scopes the query to a subset of ego nodes — reads outside the
+    scope are rejected. ``continuous=True`` pins all-push decisions (results
+    always fresh, the paper's continuous class) instead of cost-optimized
+    push/pull.
+    """
+
+    agg: "str | Aggregate" = "count"
+    window: WindowSpec | None = None
+    readers: "Iterable[int] | None" = None
+    continuous: bool = False
+    agg_kwargs: Mapping | None = None
+
+    def __post_init__(self):
+        if self.readers is not None:
+            object.__setattr__(self, "readers",
+                               frozenset(int(r) for r in self.readers))
+
+    def resolve(self) -> tuple[Aggregate, WindowSpec]:
+        """Construct the aggregate and validate aggregate/window compatibility
+        *now*, so a bad spec fails at ``register`` with a naming error instead
+        of deep inside plan compilation or the first masked write."""
+        agg = make_aggregate(self.agg, **dict(self.agg_kwargs or {}))
+        spec = self.window or WindowSpec(kind="tuple", size=1)
+        if not isinstance(spec, WindowSpec):
+            raise ValueError(f"Query.window must be a WindowSpec, "
+                             f"got {type(spec).__name__}")
+        if spec.kind not in ("tuple", "time"):
+            raise ValueError(f"unknown window kind {spec.kind!r}; "
+                             f"choose 'tuple' or 'time'")
+        if spec.kind == "time" and not spec.capacity:
+            raise ValueError(
+                "time windows need an explicit ring capacity: "
+                "WindowSpec('time', T, capacity=...) — the ring must hold "
+                "every write that can arrive within T")
+        if spec.size < 1:
+            raise ValueError(f"window size must be >= 1, got {spec.size}")
+        if spec.capacity and spec.kind == "tuple" \
+                and spec.capacity < int(spec.size):
+            raise ValueError(
+                f"tuple window of c={int(spec.size)} cannot fit in a ring of "
+                f"capacity {spec.capacity}")
+        # the aggregate declares the raw write arity its lift consumes
+        # (vector sum/max/min match their pao_dim; count/avg/topk lift
+        # scalars; custom aggregates set Aggregate(value_dim=...))
+        expected = agg.value_dim
+        if spec.value_dim != expected:
+            raise ValueError(
+                f"aggregate {agg.name!r} consumes value_dim={expected} "
+                f"writes but the window carries value_dim={spec.value_dim}")
+        if self.readers is not None and not self.readers:
+            raise ValueError("Query.readers is empty — omit it (None) to "
+                             "cover every reader")
+        return agg, spec
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryHandle:
+    """Registered query: the ticket ``read`` answers against. Handles of one
+    engine group share plan, windows and PAOs (aggregate sharing)."""
+
+    qid: int
+    query: Query
+    agg: Aggregate
+    spec: WindowSpec
+    session: "EagrSession"
+    group: "_EngineGroup"
+
+    @property
+    def readers(self) -> "frozenset[int] | None":
+        return self.query.readers
+
+    def read(self, ids) -> np.ndarray:
+        return self.session.read(self, ids)
+
+
+# ------------------------------------------------------------- engine groups
+class _EngineGroup:
+    """One (aggregate, window, continuous) equivalence class of queries: a
+    decision vector, an engine (single or stacked-sharded) and its churn
+    journal, shared by every query registered with the compatible spec."""
+
+    def __init__(self, session: "EagrSession", key: tuple,
+                 agg: Aggregate, spec: WindowSpec, continuous: bool):
+        self.session = session
+        self.key = key
+        self.agg = agg
+        self.spec = spec
+        self.continuous = continuous
+        self.handles: list[int] = []
+        self.window_int = int(max(1, spec.capacity or spec.size))
+        self.cost = session._cost_model(agg, self.window_int)
+        # sharded groups journal through per-shard DynamicOverlays inside
+        # ShardedDynamic — only single-engine groups need their own fork
+        basis_dyn = None if session.n_shards else session._master.fork()
+        basis = (basis_dyn or session._master).to_overlay(prune=False)
+        if continuous:
+            decisions = np.full(basis.n_nodes, D.PUSH, np.int64)
+        else:
+            wf, rf = session._frequencies(basis)
+            decisions, _ = D.decide_mincut(basis, wf, rf, self.cost,
+                                           window=self.window_int)
+        if session.n_shards:
+            from repro.distributed.eagr_shard import (
+                ShardedDynamic,
+                partition_overlay,
+            )
+            from repro.distributed.stacked import StackedShardedEngine
+
+            self.dyn = None
+            self.sharded = partition_overlay(
+                basis, decisions, n_shards=session.n_shards,
+                seed=session.seed, backend=session.backend,
+                headroom=session.headroom)
+            self.engine = StackedShardedEngine(
+                self.sharded, agg, spec, base_capacity=session.n_base)
+            self.sdyn = ShardedDynamic(self.sharded, self.engine,
+                                       growth=session.growth)
+        else:
+            self.dyn = basis_dyn
+            self.sdyn = None
+            self.engine = EagrEngine(basis, decisions, agg, spec,
+                                     backend=session.backend,
+                                     headroom=session.headroom)
+
+    # ------------------------------------------------------------- mutations
+    @property
+    def _journal(self):
+        return self.sdyn if self.sdyn is not None else self.dyn
+
+    def flush(self, growth: float):
+        if self.sdyn is not None:
+            return self.sdyn.apply()
+        delta = self.dyn.drain_delta()
+        if delta.empty:
+            return None
+        return self.engine.apply_delta(delta, growth=growth)
+
+    # ------------------------------------------------------------ adaptation
+    def adapt(self) -> int:
+        """§4.8 frontier re-decision against observed frequencies; recompiles
+        + re-adopts only when a flip actually happened. Continuous groups are
+        pinned all-push and never adapt."""
+        if self.continuous:
+            return 0
+        if self.sdyn is None:
+            plan = self.engine.plan
+            ov = plan.host.export_overlay() if plan.host is not None \
+                else self.engine.overlay
+            obs_w, obs_r = self.session._observed(ov)
+            dec, flips = D.adapt_decisions(ov, plan.decision, obs_w, obs_r,
+                                           self.cost, window=self.window_int)
+            if flips:
+                self.engine.adopt_decisions(dec)
+            return flips
+        decs: list[np.ndarray | None] = []
+        total = 0
+        for s, plan in enumerate(self.sharded.shard_plans):
+            ov = plan.host.export_overlay() if plan.host is not None \
+                else self.sharded.shards[s]
+            obs_w, obs_r = self.session._observed(ov)
+            dec, flips = D.adapt_decisions(ov, plan.decision, obs_w, obs_r,
+                                           self.cost, window=self.window_int)
+            decs.append(dec if flips else None)
+            total += flips
+        if total:
+            self.sdyn.readopt_decisions(decs)
+        return total
+
+
+# ----------------------------------------------------------------------- API
+class EagrSession:
+    """Session over one data graph: overlay construction, cost-model
+    calibration and push/pull decisions happen inside; queries, writes, reads
+    and graph mutations are the whole public surface.
+
+    Parameters
+    ----------
+    graph : CSRGraph | Bipartite
+        The data graph (1-hop in-neighborhood queries by default; ``hops``/
+        ``pred``/``neighborhood`` forward to :func:`build_bipartite`), or a
+        pre-built bipartite writer/reader spec.
+    shards : int | None
+        ``None`` runs each engine group on one :class:`EagrEngine`;
+        ``N`` reader-partitions the overlay and runs groups as one
+        ``shard_map`` program (:class:`StackedShardedEngine`).
+    backend : 'pallas' | 'xla' | 'xla_unrolled' | None
+        Per-level reduce backend; defaults to ``EAGR_BACKEND`` / platform.
+    headroom : float
+        Slot/node/level padding growth at first compile, so structural churn
+        patches in place (§3.3) instead of recompiling.
+    write_freq, read_freq : np.ndarray | None
+        Per-base-id frequencies for ``decide_mincut``. Default: observed
+        session traffic when any exists, else uniform.
+    calibrate : bool
+        Learn the cost model by timing the aggregate (§4.2) instead of the
+        analytic model.
+    adapt_every : int
+        Re-run §4.8 frontier adaptation every N ``update``/``read`` calls
+        (0 disables).
+    """
+
+    def __init__(self, graph, *, shards: int | None = None,
+                 backend: str | None = None, headroom: float = 2.0,
+                 growth: float = 2.0, variant: str = "vnm_a",
+                 max_iterations: int = 3, seed: int = 0, threshold: int = 4,
+                 split_limit: int = 5, hops: int = 1, pred=None,
+                 neighborhood=None, write_freq=None, read_freq=None,
+                 calibrate: bool = False, adapt_every: int = 0):
+        bp = graph if isinstance(graph, Bipartite) else build_bipartite(
+            graph, hops=hops, pred=pred, neighborhood=neighborhood)
+        self.bipartite = bp
+        self.n_base = bp.n_base
+        self.n_shards = int(shards) if shards else 0
+        if shards is not None and self.n_shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.backend = backend
+        self.headroom = headroom
+        self.growth = growth
+        self.seed = seed
+        self.calibrate = calibrate
+        self.adapt_every = int(adapt_every)
+        self.write_freq = None if write_freq is None \
+            else np.asarray(write_freq, np.float64)
+        self.read_freq = None if read_freq is None \
+            else np.asarray(read_freq, np.float64)
+        overlay, self.overlay_stats = construct_vnm(
+            bp, variant=variant, max_iterations=max_iterations, seed=seed)
+        self._master = DynamicOverlay.from_overlay(
+            overlay, bp.reader_input_sets(),
+            threshold=threshold, split_limit=split_limit)
+        self._groups: dict[tuple, _EngineGroup] = {}
+        self._handles: dict[int, QueryHandle] = {}
+        self._next_qid = 0
+        self._value_dim: int | None = None
+        self._wcount = np.zeros(self.n_base, np.float64)
+        self._rcount = np.zeros(self.n_base, np.float64)
+        self._ops_since_adapt = 0
+        self._pending = False
+
+    # ------------------------------------------------------------- lifecycle
+    def register(self, query: Query) -> QueryHandle:
+        """Validate and register one query. Compatible specs share an engine
+        group (and with it plan, windows and partial aggregates); the first
+        query of a new spec compiles the group's plan. A query registered
+        after traffic starts with empty windows (it observes writes from its
+        registration on)."""
+        if not isinstance(query, Query):
+            raise ValueError(f"register() takes a Query, "
+                             f"got {type(query).__name__}")
+        agg, spec = query.resolve()
+        if self._value_dim is None:
+            self._value_dim = spec.value_dim
+        elif spec.value_dim != self._value_dim:
+            raise ValueError(
+                f"session write stream carries value_dim={self._value_dim} "
+                f"but this query's window wants value_dim={spec.value_dim}; "
+                f"one session serves one write-value shape")
+        key = (agg, spec, bool(query.continuous))
+        group = self._groups.get(key)
+        if group is None:
+            group = _EngineGroup(self, key, agg, spec, bool(query.continuous))
+            self._groups[key] = group
+        handle = QueryHandle(qid=self._next_qid, query=query, agg=agg,
+                             spec=spec, session=self, group=group)
+        self._next_qid += 1
+        group.handles.append(handle.qid)
+        self._handles[handle.qid] = handle
+        return handle
+
+    def unregister(self, handle: QueryHandle) -> None:
+        """Retire one query; the last query of a group releases its engine."""
+        self._check_handle(handle)
+        del self._handles[handle.qid]
+        handle.group.handles.remove(handle.qid)
+        if not handle.group.handles:
+            del self._groups[handle.group.key]
+        if not self._groups:
+            self._value_dim = None  # nothing constrains the stream anymore
+
+    @property
+    def queries(self) -> list[QueryHandle]:
+        return list(self._handles.values())
+
+    @property
+    def n_engine_groups(self) -> int:
+        return len(self._groups)
+
+    @property
+    def readers(self) -> list[int]:
+        """Base ids currently readable (non-empty ego neighborhoods)."""
+        return sorted(r for r, ws in self._master.reader_inputs.items() if ws)
+
+    @property
+    def writers(self) -> list[int]:
+        """Base ids with a registered write stream."""
+        return sorted(self._master.b.writer_node)
+
+    def neighborhood(self, reader: int) -> set[int]:
+        """The reader's current writer set N(reader), live under churn."""
+        return set(self._master.reader_inputs.get(int(reader), set()))
+
+    # -------------------------------------------------------------- execution
+    def update(self, src_ids, values=None) -> None:
+        """Apply one batch of writes (base writer ids + raw values) to every
+        registered query — the session's single shared write stream. Values
+        default to ones (pure count/presence streams). Writes to ids no query
+        consumes are dropped, exactly as the engines drop them."""
+        if not self._groups:
+            raise ValueError("no queries registered — register() one before "
+                             "streaming updates")
+        if self._pending:
+            self.flush()
+        ids = np.asarray(src_ids, np.int64).reshape(-1)
+        if len(ids) and ids.min() < 0:
+            raise ValueError("negative base ids in update batch")
+        if values is None:
+            values = np.ones(len(ids), np.float32)
+        vals = np.asarray(values, np.float32)
+        want = (len(ids),) if self._value_dim == 1 \
+            else (len(ids), self._value_dim)
+        if vals.shape != want:
+            raise ValueError(f"update values shape {vals.shape} != {want} "
+                             f"(session value_dim={self._value_dim})")
+        B = bucket_batch(len(ids))
+        for group in self._groups.values():
+            group.engine.write_batch(ids, vals, batch_size=B)
+        if len(ids):
+            self._grow_counts(int(ids.max()))
+            np.add.at(self._wcount, ids, 1.0)
+        self._tick()
+
+    def read(self, handle: QueryHandle, ids) -> np.ndarray:
+        """Answer one batch of ego-centric reads for a registered query.
+        Raises for ids outside the query's ``readers`` scope or unknown to
+        the overlay."""
+        self._check_handle(handle)
+        if self._pending:
+            self.flush()
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if handle.readers is not None:
+            outside = [int(b) for b in ids if int(b) not in handle.readers]
+            if outside:
+                raise ValueError(
+                    f"read: base ids {sorted(set(outside))[:8]} are outside "
+                    f"this query's readers scope")
+        out = handle.group.engine.read_batch(ids,
+                                             batch_size=bucket_batch(len(ids)))
+        if len(ids):
+            self._grow_counts(int(ids.max()))
+            np.add.at(self._rcount, ids, 1.0)
+        self._tick()
+        return out
+
+    # --------------------------------------------------------------- mutations
+    def add_edge(self, u: int, v: int, *, affected=None) -> None:
+        """Data-graph edge u -> v appeared (reader v's neighborhood gains
+        writer u for 1-hop queries; pass ``affected={reader: {writers}}`` for
+        custom neighborhoods). Journaled; lands on the plans at flush()."""
+        self._touch(u, v)
+        self._master.add_edge(u, v, affected=affected)
+        for group in self._groups.values():
+            group._journal.add_edge(u, v, affected=affected)
+
+    def delete_edge(self, u: int, v: int, *, affected=None) -> None:
+        self._touch(u, v)
+        self._master.delete_edge(u, v, affected=affected)
+        for group in self._groups.values():
+            group._journal.delete_edge(u, v, affected=affected)
+
+    def add_node(self, u: int, in_neighbors: Iterable[int] = (),
+                 out_readers: Iterable[int] = ()) -> None:
+        """New base node u: a writer feeding ``out_readers`` and a reader
+        over ``in_neighbors``."""
+        ins, outs = set(map(int, in_neighbors)), set(map(int, out_readers))
+        self._touch(u, *ins, *outs)
+        self._master.add_node(u, ins, outs)
+        for group in self._groups.values():
+            group._journal.add_node(u, ins, outs)
+
+    def delete_node(self, u: int) -> None:
+        self._touch(u)
+        self._master.delete_node(u)
+        for group in self._groups.values():
+            group._journal.delete_node(u)
+
+    def flush(self) -> list:
+        """Drain every group's mutation journal into its live plan through
+        the §3.3 patch path (device-resident ``PatchProgram``; recompile only
+        on genuine capacity overflow). Called automatically by the next
+        ``update``/``read`` after a mutation; explicit calls let callers
+        batch churn bursts. Returns per-group patch results."""
+        self._master.drain_delta()  # master only snapshots for late register
+        results = [group.flush(self.growth)
+                   for group in self._groups.values()]
+        self._pending = False
+        return results
+
+    def adapt(self) -> int:
+        """Re-run the §4.8 frontier adaptation on every group against
+        observed frequencies now (also triggered every ``adapt_every``
+        operations). Returns the total number of decision flips."""
+        if self._pending:
+            self.flush()
+        return sum(group.adapt() for group in self._groups.values())
+
+    # ---------------------------------------------------------------- internal
+    def _check_handle(self, handle) -> None:
+        if not isinstance(handle, QueryHandle) \
+                or self._handles.get(getattr(handle, "qid", -1)) is not handle:
+            raise ValueError("unknown query handle (not registered with this "
+                             "session, or already unregistered)")
+
+    def _tick(self) -> None:
+        self._ops_since_adapt += 1
+        if self.adapt_every and self._ops_since_adapt >= self.adapt_every:
+            self._ops_since_adapt = 0
+            for group in self._groups.values():
+                group.adapt()
+
+    def _touch(self, *ids) -> None:
+        self._pending = True
+        top = max((int(i) for i in ids), default=-1)
+        if top >= 0:
+            self._grow_counts(top)
+
+    def _grow_counts(self, top: int) -> None:
+        if top < len(self._wcount):
+            return
+        size = 1 << max(1, int(top)).bit_length()
+        grow = lambda a: np.concatenate([a, np.zeros(size - len(a))])
+        self._wcount, self._rcount = grow(self._wcount), grow(self._rcount)
+
+    def _need(self, overlay) -> int:
+        top = max((o for o in overlay.origin if o >= 0), default=0)
+        return max(self.n_base, top + 1, len(self._wcount))
+
+    def _observed(self, overlay) -> tuple[np.ndarray, np.ndarray]:
+        """Raw observed per-base-id frequencies, sized to cover the overlay's
+        origin space (zeros for never-seen ids)."""
+        need = self._need(overlay)
+        pad = lambda a: np.concatenate([a, np.zeros(need - len(a))]) \
+            if need > len(a) else a[:need]
+        return pad(self._wcount), pad(self._rcount)
+
+    def _frequencies(self, overlay) -> tuple[np.ndarray, np.ndarray]:
+        """Decision-time frequencies: explicit constructor arrays win, then
+        observed traffic (+1 smoothing so unseen nodes keep a floor), then
+        uniform."""
+        need = self._need(overlay)
+
+        def resolve(explicit, observed):
+            out = np.ones(need, np.float64)
+            if explicit is not None:
+                out[: min(need, len(explicit))] = explicit[:need]
+            elif observed.sum() > 0:
+                out += observed[:need] if len(observed) >= need else \
+                    np.concatenate([observed,
+                                    np.zeros(need - len(observed))])
+            return out
+
+        return (resolve(self.write_freq, self._wcount),
+                resolve(self.read_freq, self._rcount))
+
+    def _cost_model(self, agg: Aggregate, window: int) -> D.CostModel:
+        if self.calibrate:
+            return D.calibrate_cost_model(agg, pao_dim=agg.pao_dim)
+        try:
+            return D.cost_model_for(agg.name, window=window)
+        except ValueError:
+            # custom aggregate: assume O(1) incremental update, O(k) merge
+            return D.CostModel(H=lambda k: 1.0,
+                               L=lambda k: float(max(1, k)), name=agg.name)
