@@ -1,0 +1,155 @@
+"""Construction-at-scale benchmark -> BENCH_construct.json.
+
+Measures the compile-side pipeline ``graph -> build_bipartite -> construct_vnm
+(-> decide_mincut)`` across graph sizes (12k R-MAT like BENCH_engine, then
+120k / 1M power-law), with the per-phase breakdown from
+``ConstructionStats.phase_seconds`` and the sharing index achieved. At the
+smallest size the object-based reference engine is timed too, so the JSON
+records the vectorized speedup on the same box — that ratio (and the SI, which
+is deterministic for a fixed seed) is what ``--check`` gates against
+``BENCH_baselines.json``: machine-independent structural regressions, not
+runner speed.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --construct [--quick] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import dataflow as D
+from repro.core.bipartite import build_bipartite
+from repro.core.vnm import construct_vnm
+from repro.graphs.generators import powerlaw_graph, rmat_graph
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_construct.json")
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_baselines.json")
+
+# decide_mincut stays on the object overlay (Dinic per pruned component);
+# past this size it is excluded rather than dominating the report
+MINCUT_MAX_NODES = 200_000
+
+FULL_SIZES = [
+    ("12k", "rmat", 12_000, 72_000),
+    ("120k", "powerlaw", 120_000, 720_000),
+    ("1M", "powerlaw", 1_000_000, 10_000_000),
+]
+QUICK_SIZES = [("4k", "rmat", 4_000, 24_000)]
+
+
+def _one_size(name: str, gen: str, n_nodes: int, n_edges: int,
+              *, with_reference: bool) -> dict:
+    t0 = time.perf_counter()
+    g = (rmat_graph(n_nodes, n_edges, seed=0) if gen == "rmat"
+         else powerlaw_graph(n_nodes, n_edges, sharing=0.5, seed=0))
+    gen_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    bp = build_bipartite(g)
+    bipartite_s = time.perf_counter() - t0
+
+    ov, stats = construct_vnm(bp, variant="vnm_a", max_iterations=4, seed=0)
+
+    mincut_s = None
+    if ov.n_nodes <= MINCUT_MAX_NODES:
+        wf = np.ones(bp.n_base)
+        cm = D.cost_model_for("sum", window=8)
+        t0 = time.perf_counter()
+        D.decide_mincut(ov, wf, wf, cm, window=8)
+        mincut_s = round(time.perf_counter() - t0, 3)
+
+    ref_s = None
+    if with_reference:
+        _, ref_stats = construct_vnm(bp, variant="vnm_a", max_iterations=4,
+                                     seed=0, reference=True)
+        ref_s = round(ref_stats.seconds, 3)
+
+    row = {
+        "name": name,
+        "generator": gen,
+        "n_nodes": n_nodes,
+        "graph_edges": int(g.n_edges),
+        "bipartite_edges": int(bp.n_edges),
+        "graph_gen_s": round(gen_s, 3),
+        "bipartite_s": round(bipartite_s, 3),
+        "construct_s": round(stats.seconds, 3),
+        "phase_seconds": {k: round(v, 3) for k, v in stats.phase_seconds.items()},
+        "iterations": stats.iterations,
+        "bicliques": stats.bicliques,
+        "overlay_nodes": int(ov.n_nodes),
+        "overlay_edges": int(ov.n_edges),
+        "si": round(ov.sharing_index(bp.n_edges), 4),
+        "mincut_s": mincut_s,
+        "reference_construct_s": ref_s,
+    }
+    if ref_s is not None and stats.seconds > 0:
+        row["speedup_vs_reference"] = round(ref_s / stats.seconds, 2)
+    return row
+
+
+def _check(report: dict, quick: bool) -> None:
+    with open(BASELINE_PATH) as f:
+        baselines = json.load(f)
+    base = baselines.get("construct", {}).get("quick" if quick else "full")
+    if base is None:
+        print("check: no committed construct baseline for this mode",
+              flush=True)
+        return
+    tol = float(baselines.get("tolerance", 0.30))
+    lo = 1.0 - tol
+    gated = report["sizes"][0]  # the reference-timed size
+    failures = []
+    got = gated.get("speedup_vs_reference")
+    b = base["speedup_vs_reference_min"]
+    if got is None or got < b * lo:
+        failures.append(
+            f"baseline regression: construct speedup vs reference "
+            f"{got}x < {b}x * {lo:.2f} (BENCH_baselines.json)")
+    else:
+        print(f"check OK: speedup vs reference {got}x >= floor of "
+              f"baseline {b}x", flush=True)
+    got_si = gated["si"]
+    b_si = base["si_min"]
+    if got_si < b_si * lo:
+        failures.append(
+            f"baseline regression: sharing index {got_si} < "
+            f"{b_si} * {lo:.2f} (BENCH_baselines.json)")
+    else:
+        print(f"check OK: sharing index {got_si} >= floor of baseline {b_si}",
+              flush=True)
+    if failures:
+        raise SystemExit("\n".join(failures))
+
+
+def run_construct_bench(quick: bool = False, check: bool = False,
+                        out_path: str = OUT_PATH) -> dict:
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    report = {
+        "bench": "construction",
+        "quick": quick,
+        "algorithm": "vnm_a",
+        "max_iterations": 4,
+        "mincut_max_nodes": MINCUT_MAX_NODES,
+        "sizes": [],
+    }
+    for i, (name, gen, n_nodes, n_edges) in enumerate(sizes):
+        row = _one_size(name, gen, n_nodes, n_edges, with_reference=(i == 0))
+        report["sizes"].append(row)
+        print(f"construct/{name}: {row}", flush=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+    if check:
+        _check(report, quick)
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    run_construct_bench(quick="--quick" in sys.argv,
+                        check="--check" in sys.argv)

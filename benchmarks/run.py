@@ -22,6 +22,10 @@ def main(argv=None) -> None:
     p.add_argument("--dynamic", action="store_true",
                    help="run the structural-churn benchmark (patch vs "
                         "recompile, §3.3) and emit BENCH_dynamic.json")
+    p.add_argument("--construct", action="store_true",
+                   help="run the overlay-construction scale benchmark "
+                        "(12k/120k/1M graphs, per-phase breakdown) and emit "
+                        "BENCH_construct.json")
     p.add_argument("--sharded", action="store_true",
                    help="run the stacked shard_map vs per-shard host loop "
                         "benchmark at 2/4/8 shards (forces 8 host devices) "
@@ -38,6 +42,10 @@ def main(argv=None) -> None:
     if args.dynamic:
         from benchmarks.dynamic_bench import run_dynamic_bench
         run_dynamic_bench(quick=args.quick, check=args.check)
+        return
+    if args.construct:
+        from benchmarks.construct_bench import run_construct_bench
+        run_construct_bench(quick=args.quick, check=args.check)
         return
     if args.sharded:
         from benchmarks.sharded_bench import run_sharded_bench

@@ -57,7 +57,20 @@ def build_bipartite(
     elif hops != 1:
         raise ValueError(f"hops must be 1 or 2, got {hops}")
 
-    reader_inputs: dict[int, np.ndarray] = {}
+    if pred is None and neighborhood is None:
+        # bulk path: CSR rows are already deduplicated and sorted, so reader
+        # lists are direct row views and the writer set is one np.unique
+        reader_inputs = {
+            int(v): rev.indices[rev.indptr[v]: rev.indptr[v + 1]]
+            for v in np.flatnonzero(np.diff(rev.indptr) > 0)
+        }
+        return Bipartite(
+            n_base=graph.n_nodes,
+            reader_inputs=reader_inputs,
+            writers=np.unique(rev.indices),
+        )
+
+    reader_inputs = {}
     writer_set: set[int] = set()
     for v in range(graph.n_nodes):
         if pred is not None and not pred(v):

@@ -177,6 +177,30 @@ class Overlay:
         return sets
 
 
+def overlay_from_flat(
+    kinds: list[str],
+    origin: list[int],
+    src: list[int],
+    indptr: np.ndarray,
+    signs: list[int] | None = None,
+    dup_insensitive: bool = False,
+) -> Overlay:
+    """Materialize an Overlay from flat per-destination-grouped edge arrays:
+    node v's in-edge sources are ``src[indptr[v]:indptr[v+1]]`` (in in-edge
+    order). ``signs=None`` means all edges are positive. This is the bulk
+    constructor for the vectorized assembly path — per-node Python edge lists
+    are built in one pass instead of via n_edges ``add_edge`` calls."""
+    in_edges: list[list[tuple[int, int]]] = []
+    if signs is None:
+        for a, b in zip(indptr[:-1], indptr[1:]):
+            in_edges.append([(s, 1) for s in src[a:b]])
+    else:
+        for a, b in zip(indptr[:-1], indptr[1:]):
+            in_edges.append(list(zip(src[a:b], signs[a:b])))
+    return Overlay(kinds=list(kinds), origin=[int(o) for o in origin],
+                   in_edges=in_edges, dup_insensitive=dup_insensitive)
+
+
 def all_pull_overlay(reader_inputs: dict[int, "np.ndarray"], writers: np.ndarray) -> Overlay:
     """Baseline: direct writer->reader edges, no sharing (the bipartite graph
     itself as an overlay). Used for the *all-pull* / *all-push* baselines."""

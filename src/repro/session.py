@@ -253,6 +253,11 @@ class EagrSession:
     calibration and push/pull decisions happen inside; queries, writes, reads
     and graph mutations are the whole public surface.
 
+    ``session.overlay_stats`` keeps the :class:`ConstructionStats` of the
+    one-time VNM pass, including ``phase_seconds`` — the per-phase build
+    breakdown (``shingle``/``chunk``/``build``/``mine``/``apply``/
+    ``assemble``) of the vectorized construction engine.
+
     Parameters
     ----------
     graph : CSRGraph | Bipartite

@@ -1,0 +1,169 @@
+"""Vectorized-vs-reference construction parity (PR 6).
+
+The vectorized engine (rank-sorted rows + flat-array assembly) and the
+object-based reference pipeline (``EAGR_CONSTRUCT_REFERENCE=1``) implement the
+same semantics — frozen per-group item order, incremental detach/reinsert,
+canonical tie-breaks — so for every variant they must produce *bit-identical*
+overlays: same node kinds/origins, same in-edge lists, same signs, after
+``pruned()``. Also pins the shingle hash values so the reader ordering (and
+with it every downstream overlay) stays stable across rewrites.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bipartite import build_bipartite
+from repro.core.shingles import (min_hashes_csr, shingle_order,
+                                 shingle_order_csr, shingle_value)
+from repro.core.vnm import construct_vnm
+from repro.graphs.csr import CSRGraph
+from repro.graphs.generators import powerlaw_graph, rmat_graph, small_example_graph
+
+ALGOS = ["vnm", "vnm_a", "vnm_n", "vnm_d"]
+
+
+def assert_same_overlay(a, b):
+    assert a.kinds == b.kinds
+    assert a.origin == b.origin
+    assert a.in_edges == b.in_edges
+    assert a.dup_insensitive == b.dup_insensitive
+
+
+def assert_parity(bp, variant, *, max_iterations=4, seed=0):
+    ov_f, st_f = construct_vnm(bp, variant=variant,
+                               max_iterations=max_iterations, seed=seed)
+    ov_r, st_r = construct_vnm(bp, variant=variant,
+                               max_iterations=max_iterations, seed=seed,
+                               reference=True)
+    assert_same_overlay(ov_f, ov_r)
+    assert st_f.iterations == st_r.iterations
+    assert st_f.bicliques == st_r.bicliques
+    assert st_f.chunk_sizes == st_r.chunk_sizes
+    assert np.allclose(st_f.si_per_iteration, st_r.si_per_iteration)
+    ov_f.validate(bp.reader_input_sets())
+    return ov_f, st_f
+
+
+# ------------------------------------------------------------- deterministic
+@pytest.mark.parametrize("variant", ALGOS)
+def test_parity_on_example(example_bipartite, variant):
+    assert_parity(example_bipartite, variant)
+
+
+@pytest.mark.parametrize("variant", ALGOS)
+def test_parity_on_rmat(rmat_bipartite, variant):
+    assert_parity(rmat_bipartite, variant)
+
+
+@pytest.mark.parametrize("variant", ["vnm_a", "vnm_d"])
+def test_parity_on_powerlaw(variant):
+    bp = build_bipartite(powerlaw_graph(600, 4_000, seed=5))
+    assert_parity(bp, variant)
+
+
+def test_env_flag_selects_reference(monkeypatch, example_bipartite):
+    monkeypatch.setenv("EAGR_CONSTRUCT_REFERENCE", "1")
+    ov_env, _ = construct_vnm(example_bipartite, variant="vnm_a",
+                              max_iterations=3, seed=0)
+    monkeypatch.delenv("EAGR_CONSTRUCT_REFERENCE")
+    ov_ref, _ = construct_vnm(example_bipartite, variant="vnm_a",
+                              max_iterations=3, seed=0, reference=True)
+    assert_same_overlay(ov_env, ov_ref)
+
+
+def test_phase_seconds_breakdown(rmat_bipartite):
+    _, stats = construct_vnm(rmat_bipartite, variant="vnm_a",
+                             max_iterations=3, seed=0)
+    assert set(stats.phase_seconds) == {"shingle", "chunk", "build", "mine",
+                                        "apply", "assemble"}
+    assert all(v >= 0.0 for v in stats.phase_seconds.values())
+    # phases cover the bulk of the measured wall clock
+    assert sum(stats.phase_seconds.values()) <= stats.seconds * 1.01
+
+
+# ------------------------------------------------------------- property sweep
+@st.composite
+def random_bipartite(draw):
+    n = draw(st.integers(8, 40))
+    density = draw(st.floats(0.05, 0.5))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)) < density
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    if src.size == 0:
+        src, dst = np.array([0]), np.array([1])
+    g = CSRGraph.from_edges(src, dst, n)
+    return build_bipartite(g)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_bipartite(), st.sampled_from(ALGOS), st.integers(0, 3))
+def test_property_vectorized_matches_reference(bp, variant, seed):
+    assert_parity(bp, variant, max_iterations=3, seed=seed)
+
+
+# ------------------------------------------------------------- shingles
+def test_shingle_values_pinned():
+    # values recorded from the pre-vectorization implementation: the reader
+    # ordering (hence every constructed overlay) depends on them bit-for-bit
+    assert [shingle_value(np.array([1, 2, 3]), s) for s in (0, 1, 7)] == [
+        627405149472732430, 9716232063330790915, 4414019431610648415]
+    assert shingle_value(np.array([0]), 0) == 12035550249420947055
+    assert shingle_value(np.array([], dtype=np.int64), 5) == 0
+    assert shingle_value(np.array([10**6, 42, 99999]), 12345) == \
+        4157696482687128331
+
+
+def test_shingle_order_pinned():
+    lists = {3: np.array([1, 2, 3]), 0: np.array([2, 3, 4]),
+             7: np.array([1, 2, 3]), 5: np.array([9])}
+    assert shingle_order(lists, seed=0) == [3, 7, 0, 5]
+    assert shingle_order(lists, n_hashes=3, seed=11) == [5, 3, 7, 0]
+
+
+def test_batched_minhash_matches_scalar():
+    rng = np.random.default_rng(3)
+    lists = [np.unique(rng.integers(0, 500, rng.integers(0, 12)))
+             for _ in range(50)]
+    indptr = np.zeros(len(lists) + 1, dtype=np.int64)
+    np.cumsum([a.size for a in lists], out=indptr[1:])
+    values = np.concatenate(lists)
+    mh = min_hashes_csr(indptr, values, n_hashes=3, seed=17)
+    for i, a in enumerate(lists):
+        for h in range(3):
+            assert int(mh[i, h]) == shingle_value(a, 17 + h)
+
+
+def test_csr_order_matches_dict_order():
+    rng = np.random.default_rng(9)
+    lists = {int(r): np.unique(rng.integers(0, 100, 5)) + 1
+             for r in rng.permutation(60)[:30]}
+    rids = np.fromiter(lists.keys(), dtype=np.int64)
+    indptr = np.zeros(rids.size + 1, dtype=np.int64)
+    np.cumsum([lists[int(r)].size for r in rids], out=indptr[1:])
+    values = np.concatenate([lists[int(r)] for r in rids])
+    got = shingle_order_csr(rids, indptr, values, seed=4)
+    assert [int(x) for x in got] == shingle_order(lists, seed=4)
+
+
+# ------------------------------------------------------------- generator
+def test_powerlaw_generator_shape_and_tail():
+    n, m = 20_000, 120_000
+    g = powerlaw_graph(n, m, seed=1)
+    assert g.n_nodes == n
+    assert g.indices.size == g.indptr[-1]
+    assert m * 0.75 <= g.n_edges <= m  # dedup/self-loop losses only
+    bp = build_bipartite(g)
+    indeg = np.array([v.size for v in bp.reader_inputs.values()])
+    # power-law in-degrees: a heavy tail far above the mean, but most
+    # readers stay small
+    assert indeg.max() > 30 * indeg.mean()
+    assert np.median(indeg) <= 2 * indeg.mean()
+
+
+def test_powerlaw_generator_deterministic():
+    a = powerlaw_graph(500, 3_000, seed=7)
+    b = powerlaw_graph(500, 3_000, seed=7)
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
