@@ -1,0 +1,82 @@
+"""Committed-baseline gates: the generalized ``--check``.
+
+A gate is (dotted metric path, direction, optional absolute floor). The
+measured value must satisfy the floor AND stay inside the committed
+baseline's tolerance band — the same two-sided discipline
+``dynamic_bench._check_report`` established, factored out so every bench
+shares one implementation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+BASELINES_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(__file__)), "..", "BENCH_baselines.json")
+
+
+def load_baselines(path: str | None = None) -> dict:
+    with open(path or os.path.abspath(BASELINES_PATH)) as fh:
+        return json.load(fh)
+
+
+def _lookup(report: dict, dotted: str) -> Any:
+    cur: Any = report
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_gates(report: dict, gates: list[dict], *,
+                baselines: dict | None = None,
+                section: str | None = None,
+                label: str = "bench") -> None:
+    """Each gate: ``{"path": "modes.pipeline.events_per_s",
+    "direction": "higher"|"lower", "floor": <abs min, optional>,
+    "ceiling": <abs max, optional>, "baseline": <key, optional>}``.
+
+    ``baseline`` names a key in ``baselines[section]``; when present the
+    measured value must be >= base*(1-tol) for "higher" gates (<=
+    base*(1+tol) for "lower"). Raises ``SystemExit`` listing every
+    violation; prints one line per passing gate.
+    """
+    tol = float((baselines or {}).get("tolerance", 0.30))
+    base_section = (baselines or {}).get(section or "", {}) \
+        if baselines else {}
+    failures: list[str] = []
+    for g in gates:
+        path = g["path"]
+        val = _lookup(report, path)
+        if val is None:
+            failures.append(f"{path}: missing from report")
+            continue
+        val = float(val)
+        higher = g.get("direction", "higher") == "higher"
+        if "floor" in g and val < float(g["floor"]):
+            failures.append(
+                f"{path}: {val:.4g} below absolute floor {g['floor']:.4g}")
+        if "ceiling" in g and val > float(g["ceiling"]):
+            failures.append(
+                f"{path}: {val:.4g} above absolute ceiling "
+                f"{g['ceiling']:.4g}")
+        base_key = g.get("baseline")
+        if base_key is not None and base_key in base_section:
+            base = float(base_section[base_key])
+            if higher and val < base * (1.0 - tol):
+                failures.append(
+                    f"{path}: {val:.4g} regressed >"
+                    f"{tol:.0%} below baseline {base:.4g}")
+            elif not higher and val > base * (1.0 + tol):
+                failures.append(
+                    f"{path}: {val:.4g} regressed >"
+                    f"{tol:.0%} above baseline {base:.4g}")
+        if not failures or not failures[-1].startswith(path):
+            print(f"  gate ok: {path} = {val:.4g}")
+    if failures:
+        for f in failures:
+            print(f"  GATE FAIL [{label}]: {f}")
+        raise SystemExit(f"{label}: {len(failures)} gate(s) failed")
+    print(f"  {label}: all {len(gates)} gates passed")

@@ -1,0 +1,32 @@
+"""Per-PR trajectory export: one JSON line per bench run, keyed by git sha,
+appended to ``BENCH_trajectory.jsonl``. Reading the file back gives the
+throughput trajectory across the PR stack without re-running old commits."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.harness.run_local import _git
+
+TRAJECTORY_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(__file__)), "..",
+    "BENCH_trajectory.jsonl")
+
+
+def export_trajectory(bench: str, metrics: dict,
+                      path: str | None = None) -> str:
+    """Append ``{ts, sha, branch, bench, metrics}`` to the trajectory file.
+    ``metrics`` should be the small flat summary (headline numbers), not the
+    whole report. Returns the path written."""
+    path = os.path.abspath(path or TRAJECTORY_PATH)
+    line = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "sha": _git("rev-parse", "--short", "HEAD"),
+        "branch": _git("rev-parse", "--abbrev-ref", "HEAD"),
+        "bench": bench,
+        "metrics": metrics,
+    }
+    with open(path, "a") as fh:
+        fh.write(json.dumps(line, sort_keys=True) + "\n")
+    return path

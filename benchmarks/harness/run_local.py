@@ -1,0 +1,97 @@
+"""Local-run primitives: fingerprint, phase timing, percentiles, sustained
+duration loops. Everything here is measurement mechanics — benches supply
+the workload, this module supplies the clock discipline."""
+from __future__ import annotations
+
+import contextlib
+import os
+import platform
+import subprocess
+import sys
+import time
+
+
+def _git(*args: str) -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", *args], capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(__file__)))
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except OSError:
+        return None
+
+
+def env_fingerprint() -> dict:
+    """What produced the numbers: versions, device inventory, git state.
+    Committed next to every report so a regression can be attributed to
+    code vs environment."""
+    import jax
+    import numpy as np
+
+    return {
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "numpy": np.__version__,
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.device_count(),
+        "eagr_backend": os.environ.get("EAGR_BACKEND") or "(default)",
+        "git_sha": _git("rev-parse", "--short", "HEAD"),
+        "git_branch": _git("rev-parse", "--abbrev-ref", "HEAD"),
+    }
+
+
+class Phases:
+    """Named wall-clock phases of one bench run; serializes to the
+    ``phase_seconds`` dict the construct bench popularized."""
+
+    def __init__(self) -> None:
+        self.seconds: dict[str, float] = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.seconds[name] = round(
+                self.seconds.get(name, 0.0)
+                + time.perf_counter() - t0, 3)
+
+
+def percentiles(samples_s: list[float],
+                pcts: tuple = (50.0, 99.0, 99.9)) -> dict:
+    """Latency percentiles in milliseconds from a list of seconds samples.
+    Keys look like ``p50_ms`` / ``p99_ms`` / ``p99_9_ms``."""
+    out: dict[str, float | int] = {"n": len(samples_s)}
+    if not samples_s:
+        return out
+    xs = sorted(samples_s)
+    for p in pcts:
+        idx = min(len(xs) - 1, max(0, round(p / 100.0 * (len(xs) - 1))))
+        key = "p" + (f"{p:g}".replace(".", "_")) + "_ms"
+        out[key] = round(xs[idx] * 1e3, 3)
+    return out
+
+
+def sustained(step, *, duration_s: float, barrier=None) -> dict:
+    """Sustained-throughput loop: call ``step(i) -> events`` repeatedly for
+    at least ``duration_s`` of wall clock, then run ``barrier()`` (e.g. a
+    pipeline flush / ``block_until_ready``) INSIDE the timed region — what
+    is measured is steady state including the final drain, not enqueue
+    rate. Returns events, elapsed seconds and events/s."""
+    t0 = time.perf_counter()
+    events = steps = 0
+    while time.perf_counter() - t0 < duration_s:
+        events += int(step(steps))
+        steps += 1
+    if barrier is not None:
+        barrier()
+    elapsed = time.perf_counter() - t0
+    return {
+        "events": events,
+        "steps": steps,
+        "elapsed_s": round(elapsed, 3),
+        "events_per_s": round(events / elapsed, 1) if elapsed else 0.0,
+    }

@@ -30,9 +30,14 @@ def main(argv=None) -> None:
                    help="run the stacked shard_map vs per-shard host loop "
                         "benchmark at 2/4/8 shards (forces 8 host devices) "
                         "and emit BENCH_sharded.json")
+    p.add_argument("--streaming", action="store_true",
+                   help="run the streaming-ingest benchmark (legacy vs "
+                        "vectorized vs pipelined write path, reads under "
+                        "write, per-backend rows) and emit "
+                        "BENCH_streaming.json")
     p.add_argument("--check", action="store_true",
-                   help="with --dynamic/--sharded: exit nonzero if the "
-                        "measured path regresses below its floor")
+                   help="with --dynamic/--sharded/--streaming: exit nonzero "
+                        "if the measured path regresses below its floor")
     args = p.parse_args(argv)
 
     if args.engine:
@@ -50,6 +55,10 @@ def main(argv=None) -> None:
     if args.sharded:
         from benchmarks.sharded_bench import run_sharded_bench
         run_sharded_bench(quick=args.quick, check=args.check)
+        return
+    if args.streaming:
+        from benchmarks.streaming_bench import run_streaming_bench
+        run_streaming_bench(quick=args.quick, check=args.check)
         return
 
     import benchmarks.paper_figures as F

@@ -74,6 +74,99 @@ from repro.kernels.segment_agg.ops import (
 BACKENDS = ("pallas", "xla", "xla_unrolled")
 
 
+def bucket_batch(n: int, floor: int = 16) -> int:
+    """Power-of-two batch bucketing: varying user batch sizes land on a
+    handful of padded shapes, so the jitted write/read programs retrace at
+    most log2(max_batch) times per engine instead of once per distinct size."""
+    return max(floor, 1 << (max(1, int(n)) - 1).bit_length())
+
+
+class BaseRoutes:
+    """Dense base-id -> (writer row, reader node) routing tables.
+
+    The steady-state event routing path: :meth:`writer_rows` /
+    :meth:`reader_nodes` are O(B) vectorized numpy (clip + gather + validity
+    mask) with zero Python work per event, replacing the per-event dict
+    lookups the write/read hot paths used to run. The ``ExecPlan`` dicts stay
+    authoritative for churn bookkeeping (shard owner maps, retired-writer
+    accounting, the test oracle); this table mirrors them — built in bulk by
+    ``compile_plan`` and maintained incrementally by ``plan_patch`` under
+    churn (one table edit per delta entry, never per event). Capacity grows
+    in power-of-two buckets so a new high base id rarely reallocates; absent
+    entries are ``-1``.
+    """
+
+    __slots__ = ("writer_row", "reader_node")
+
+    def __init__(self, cap: int = 1):
+        cap = self._bucket(cap)
+        self.writer_row = np.full(cap, -1, np.int32)
+        self.reader_node = np.full(cap, -1, np.int32)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return max(256, 1 << (max(1, int(n)) - 1).bit_length())
+
+    @property
+    def cap(self) -> int:
+        return len(self.writer_row)
+
+    @classmethod
+    def from_maps(cls, writer_row_of_base: dict, reader_node_of_base: dict
+                  ) -> "BaseRoutes":
+        top = max((max(m) for m in (writer_row_of_base, reader_node_of_base)
+                   if m), default=0)
+        routes = cls(top + 1)
+        for table, m in ((routes.writer_row, writer_row_of_base),
+                         (routes.reader_node, reader_node_of_base)):
+            if m:
+                table[np.fromiter(m.keys(), np.int64, len(m))] = \
+                    np.fromiter(m.values(), np.int64, len(m))
+        return routes
+
+    def _grow(self, top: int) -> None:
+        if top < self.cap:
+            return
+        cap = self._bucket(top + 1)
+        for name in ("writer_row", "reader_node"):
+            old = getattr(self, name)
+            new = np.full(cap, -1, np.int32)
+            new[: len(old)] = old
+            setattr(self, name, new)
+
+    # ------------------------------------------- churn maintenance (per delta)
+    def set_writer(self, base: int, row: int) -> None:
+        self._grow(int(base))
+        self.writer_row[int(base)] = row
+
+    def clear_writer(self, base: int) -> None:
+        if 0 <= int(base) < self.cap:
+            self.writer_row[int(base)] = -1
+
+    def set_reader(self, base: int, node: int) -> None:
+        self._grow(int(base))
+        self.reader_node[int(base)] = node
+
+    def clear_reader(self, base: int) -> None:
+        if 0 <= int(base) < self.cap:
+            self.reader_node[int(base)] = -1
+
+    # ------------------------------------------------- hot path (per batch)
+    def writer_rows(self, base_ids) -> tuple[np.ndarray, np.ndarray]:
+        """Route one batch: ``(rows, mask)`` with masked lanes pinned to row
+        0 — the padding pattern the masked write bodies drop."""
+        ids = np.asarray(base_ids, np.int64).reshape(-1)
+        rows = self.writer_row[np.clip(ids, 0, self.cap - 1)]
+        mask = (ids >= 0) & (ids < self.cap) & (rows >= 0)
+        return np.where(mask, rows, 0).astype(np.int32), mask
+
+    def reader_nodes(self, base_ids) -> tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(base_ids, np.int64).reshape(-1)
+        nodes = self.reader_node[np.clip(ids, 0, self.cap - 1)]
+        mask = (ids >= 0) & (ids < self.cap) & (nodes >= 0)
+        return np.where(mask, nodes, 0).astype(np.int32), mask
+
+
 def default_backend() -> str:
     env = os.environ.get("EAGR_BACKEND", "").strip()
     if env:
@@ -143,6 +236,8 @@ class ExecPlan:
     writer_node: np.ndarray              # (n_writers,) overlay node per row
     writer_row_of_base: dict[int, int]   # base id -> window row
     reader_node_of_base: dict[int, int]  # base id -> overlay node
+    routes: "BaseRoutes | None" = None   # dense mirror of the two dicts —
+                                         # the vectorized hot-path router
     n_push_edges: int = 0
     n_pull_edges: int = 0
     host: object | None = None           # plan_patch.PlanHost mirror (lazy);
@@ -318,6 +413,7 @@ def compile_plan(overlay: Overlay, decisions: np.ndarray, *,
         writer_node=writer_node,
         writer_row_of_base=writer_row_of_base,
         reader_node_of_base=reader_node_of_base,
+        routes=BaseRoutes.from_maps(writer_row_of_base, reader_node_of_base),
         n_push_edges=sum(len(p) for p in per_level_push),
         n_pull_edges=sum(len(p) for p in per_level_pull),
     )
@@ -516,11 +612,15 @@ def read_step(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
     return agg.finalize(answers), answers
 
 
-# Single-engine jitted entry points over the pure step bodies.
+# Single-engine jitted entry points over the pure step bodies. The write
+# bodies donate the engine state: the window/PAO buffers are rewritten in
+# place (callers always rebind ``eng.state`` to the result — the consumed
+# pytree must never be read again), which keeps steady-state ingest from
+# allocating a fresh multi-MB state per batch.
 _write_body_sum = functools.partial(
-    jax.jit, static_argnums=(0, 1, 2))(write_step_sum)
+    jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))(write_step_sum)
 _write_body_extremal = functools.partial(
-    jax.jit, static_argnums=(0, 1, 2))(write_step_extremal)
+    jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))(write_step_extremal)
 _refresh_pao = functools.partial(
     jax.jit, static_argnums=(0, 1, 2))(refresh_pao_step)
 _read_body = functools.partial(jax.jit, static_argnums=(0, 1))(read_step)
@@ -600,12 +700,16 @@ class EagrEngine:
         """Apply a batch of writes (base node ids + raw values). Values are
         (B,) scalars or (B, value_dim) vectors matching the window spec.
         Writes to nodes that feed no reader (e.g. node g in the paper's
-        Figure 1) are dropped — nothing consumes them."""
+        Figure 1) are masked out — nothing consumes them. Routing is one
+        vectorized ``BaseRoutes`` table lookup; without an explicit
+        ``batch_size`` the batch pads to the power-of-two ``bucket_batch``
+        bucket, so varying arrival sizes stay on a handful of compiled
+        shapes."""
         base_ids = np.asarray(base_ids)
         values = np.asarray(values, np.float32)
-        keep = [i for i, b in enumerate(base_ids)
-                if int(b) in self.plan.writer_row_of_base]
-        if not keep and batch_size is None:
+        rows, mask = self.plan.routes.writer_rows(base_ids)
+        n_live = int(np.count_nonzero(mask))
+        if n_live == 0 and batch_size is None:
             if self.agg.combine == "sum" or self.spec.kind == "tuple":
                 # every write was dropped; skip the jit call but still advance
                 # the logical clock, matching what the masked program does
@@ -623,32 +727,61 @@ class EagrEngine:
                 self._now_host += 1.0
                 return
             # an entry expires at this evaluation instant: the masked program
-            # must run — it refreshes the touched writer PAOs at the new `now`
-            batch_size = 1
-        base_ids = base_ids[keep]
-        values = values[keep]
-        rows = np.array([self.plan.writer_row_of_base[int(b)] for b in base_ids], np.int32)
-        B = batch_size or len(rows)
+            # must run — one all-masked lane refreshes the touched writer
+            # PAOs at the new `now`
+            rows, mask = np.zeros(1, np.int32), np.zeros(1, bool)
+            values = np.zeros((1,) + values.shape[1:], np.float32)
+        B = batch_size or bucket_batch(len(rows))
+        if B < len(rows):
+            # legacy callers size the batch to the *kept* count — compact the
+            # live lanes (vectorized) instead of rejecting the batch
+            if n_live > B:
+                raise ValueError(f"batch_size={B} < {n_live} routed writes")
+            live = np.flatnonzero(mask)
+            rows, values, mask = rows[live], values[live], mask[live]
+        elif not mask.all():
+            # dropped lanes must not contribute: their raw values are dead
+            # under the mask, but zero them so non-finite garbage (inf * 0)
+            # can't leak through the masked multiply
+            m = mask.reshape((-1,) + (1,) * (values.ndim - 1))
+            values = np.where(m, values, 0.0).astype(np.float32)
         pad = B - len(rows)
-        mask = np.concatenate([np.ones(len(rows), bool), np.zeros(pad, bool)])
-        rows = np.concatenate([rows, np.zeros(pad, np.int32)])
-        vals = np.concatenate(
-            [values, np.zeros((pad,) + values.shape[1:], np.float32)])
+        if pad:
+            mask = np.concatenate([mask, np.zeros(pad, bool)])
+            rows = np.concatenate([rows, np.zeros(pad, np.int32)])
+            values = np.concatenate(
+                [values, np.zeros((pad,) + values.shape[1:], np.float32)])
+        self.write_rows(rows, values, mask, n_live=n_live)
+
+    def write_rows(self, rows: np.ndarray, vals: np.ndarray,
+                   mask: np.ndarray, *, n_live: int | None = None) -> None:
+        """Pre-routed write dispatch: ``rows`` are window rows (see
+        ``ExecPlan.routes``), masked lanes carry row 0 / value 0 and the
+        batch is already padded to its compiled shape. This is the ingest
+        pipeline's entry point — one explicit ``device_put`` of the batch
+        triple, then the async jitted step (no implicit transfers, no host
+        sync: the call returns while the device step runs). ``n_live``
+        (host-side count of live lanes) feeds the extremal expiry-heap
+        bookkeeping; it defaults to a reduction of ``mask``."""
+        if n_live is None:
+            n_live = int(np.count_nonzero(mask))
+        rows_d, vals_d, mask_d = jax.device_put(
+            (np.ascontiguousarray(rows, np.int32),
+             np.ascontiguousarray(vals, np.float32),
+             np.ascontiguousarray(mask, bool)))
         if self.agg.combine == "sum":
-            self.state = self._write(self.state, jnp.asarray(rows),
-                                     jnp.asarray(vals), jnp.asarray(mask))
+            self.state = self._write(self.state, rows_d, vals_d, mask_d)
         else:
             if self.spec.kind == "time":
-                if len(base_ids):
+                if n_live:
                     heapq.heappush(self._expiry, self._now_host)
                 boundary = self._now_host - self.spec.size
                 while self._expiry and self._expiry[0] < boundary:
                     heapq.heappop(self._expiry)  # reflected by this refresh
             prev = self._last_eval_now
             self._last_eval_now = self._now_host
-            self.state = self._write(self.state, jnp.asarray(rows),
-                                     jnp.asarray(vals), jnp.asarray(mask),
-                                     jnp.float32(prev))
+            self.state = self._write(self.state, rows_d, vals_d, mask_d,
+                                     jax.device_put(np.float32(prev)))
         self._now_host += 1.0
 
     # -------------------------------------------------- structural updates
@@ -719,19 +852,25 @@ class EagrEngine:
         self._rebind()
 
     def read_batch(self, base_ids: np.ndarray, batch_size: int | None = None):
-        """Answer a batch of reads. Returns finalized answers (B, ...)."""
-        unknown = [int(b) for b in base_ids
-                   if int(b) not in self.plan.reader_node_of_base]
-        if unknown:
+        """Answer a batch of reads. Returns finalized answers (B, ...).
+        Routing and the unknown-reader check are one vectorized table
+        lookup; the batch pads to the ``bucket_batch`` bucket unless
+        ``batch_size`` pins the shape."""
+        base_ids = np.asarray(base_ids)
+        nodes, known = self.plan.routes.reader_nodes(base_ids)
+        if not known.all():
+            bad = np.asarray(base_ids, np.int64).reshape(-1)[~known]
             raise ValueError(
-                f"read_batch: base ids {sorted(set(unknown))[:8]} are not "
-                f"readers of this overlay (no reader node registered)")
-        nodes = np.array([self.plan.reader_node_of_base[int(b)] for b in base_ids], np.int32)
-        B = batch_size or len(nodes)
+                f"read_batch: base ids {sorted(set(map(int, bad)))[:8]} are "
+                f"not readers of this overlay (no reader node registered)")
+        B = batch_size or bucket_batch(len(nodes))
+        if B < len(nodes):
+            raise ValueError(f"batch_size={B} < batch of {len(nodes)}")
         pad = B - len(nodes)
         mask = np.concatenate([np.ones(len(nodes), bool), np.zeros(pad, bool)])
         nodes = np.concatenate([nodes, np.zeros(pad, np.int32)])
-        ans, _ = self._read(self.state, jnp.asarray(nodes), jnp.asarray(mask))
+        nodes_d, mask_d = jax.device_put((nodes, mask))
+        ans, _ = self._read(self.state, nodes_d, mask_d)
         return np.asarray(jax.device_get(ans))[: len(base_ids)]
 
     # --------------------------------------------------------------- oracle

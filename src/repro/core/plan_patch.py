@@ -464,6 +464,20 @@ class PlanHost:
             bad.append("demand_dst")
         if not np.array_equal(np.asarray(a.demand_src), ds):
             bad.append("demand_src")
+        routes = plan.routes
+        for name, m in (("writer", plan.writer_row_of_base),
+                        ("reader", plan.reader_node_of_base)):
+            table = getattr(routes, f"{name}_row" if name == "writer"
+                            else "reader_node")
+            if m and max(m) >= len(table):
+                bad.append(f"routes.{name}")
+                continue
+            want = np.full(len(table), -1, np.int32)
+            if m:
+                want[np.fromiter(m.keys(), np.int64, len(m))] = \
+                    np.fromiter(m.values(), np.int64, len(m))
+            if not np.array_equal(table, want):
+                bad.append(f"routes.{name}")
         if bad:
             raise AssertionError(
                 f"device/host parity broken after patch: {bad}")
@@ -852,26 +866,35 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
 def _apply_base_maps(plan: ExecPlan, host: PlanHost,
                      delta: OverlayDelta) -> None:
     """Reconcile base-id -> row/node maps with the delta (both patch and
-    recompile paths)."""
+    recompile paths). The dense ``plan.routes`` tables — the vectorized
+    hot-path router — mirror every dict edit, so steady-state writes/reads
+    never consult the dicts."""
+    routes = plan.routes
     for b in delta.retired_writers:
         if b not in delta.new_writers:
             plan.writer_row_of_base.pop(b, None)
+            routes.clear_writer(b)
     for b, nid in delta.new_writers.items():
         row = int(np.flatnonzero(plan.writer_node == nid)[0]) \
             if (plan.writer_node == nid).any() else None
         if row is not None:
             plan.writer_row_of_base[b] = row
+            routes.set_writer(b, row)
     for b in delta.retired_readers:
         if b not in delta.new_readers:
             plan.reader_node_of_base.pop(b, None)
+            routes.clear_reader(b)
     for nid, patch in delta.nodes.items():
         o = patch.origin
         if patch.kind == "R":
             plan.reader_node_of_base[o] = nid
+            routes.set_reader(o, nid)
         elif o >= 0 and plan.reader_node_of_base.get(o) == nid:
             plan.reader_node_of_base.pop(o, None)
+            routes.clear_reader(o)
     for b in host.retired_writer_bases:
         plan.writer_row_of_base.pop(b, None)
+        routes.clear_writer(b)
 
 
 def carry_plan_bookkeeping(new: ExecPlan, old: ExecPlan,
@@ -887,6 +910,7 @@ def carry_plan_bookkeeping(new: ExecPlan, old: ExecPlan,
     if host is not None:
         for b in host.retired_writer_bases:
             new.writer_row_of_base.pop(b, None)
+            new.routes.clear_writer(b)
         new.host = PlanHost.from_plan(new, overlay, mirror=host.track_mirror)
         new.host.auto_verify = host.auto_verify
         new.host.retired_writer_bases = set(host.retired_writer_bases)

@@ -261,13 +261,20 @@ class StackedShardedEngine:
         rmap = np.full((self.n_shards, self._base_cap), -1, np.int32)
         self._reader_owner = {}
         for s, p in enumerate(plans):
-            for b, row in p.writer_row_of_base.items():
-                wmap[s, b] = row
-            for b, node in p.reader_node_of_base.items():
-                rmap[s, b] = node
-                self._reader_owner[int(b)] = s
-        self.writer_map = self._commit(jnp.asarray(wmap))
-        self.reader_map = self._commit(jnp.asarray(rmap))
+            wm, rm = p.writer_row_of_base, p.reader_node_of_base
+            if wm:
+                b = np.fromiter(wm.keys(), np.int64, len(wm))
+                wmap[s, b] = np.fromiter(wm.values(), np.int64, len(wm))
+            if rm:
+                b = np.fromiter(rm.keys(), np.int64, len(rm))
+                rmap[s, b] = np.fromiter(rm.values(), np.int64, len(rm))
+                self._reader_owner.update((int(x), s) for x in b)
+        # dense host twin of the reader map's "some shard owns this base id"
+        # predicate — the read path's unknown-id check is one vectorized
+        # gather against it instead of a per-id dict probe
+        self._reader_known = (rmap >= 0).any(axis=0)
+        self.writer_map = self._commit(jax.device_put(wmap))
+        self.reader_map = self._commit(jax.device_put(rmap))
 
     def _chunk(self, ids: np.ndarray, vals: np.ndarray | None,
                batch_size: int | None):
@@ -284,12 +291,15 @@ class StackedShardedEngine:
         # ids outside the owner maps' range are owned by no shard (the
         # device-side clip would otherwise alias them onto base id 0)
         valid[: len(ids)] = (ids >= 0) & (ids < self._base_cap)
-        out = [jnp.asarray(idp.reshape(S, -1)),
-               jnp.asarray(valid.reshape(S, -1))]
+        # explicit device_put (never jnp.asarray): transfers stay visible to
+        # transfer guards, and the arrays are freshly allocated per call so a
+        # CPU zero-copy alias can't race the async dispatch
+        out = [jax.device_put(idp.reshape(S, -1)),
+               jax.device_put(valid.reshape(S, -1))]
         if vals is not None:
             vp = np.zeros((Bp,) + vals.shape[1:], np.float32)
             vp[: len(ids)] = vals
-            out.append(jnp.asarray(vp.reshape((S, -1) + vals.shape[1:])))
+            out.append(jax.device_put(vp.reshape((S, -1) + vals.shape[1:])))
         return out
 
     # -------------------------------------------------------------- execution
@@ -314,7 +324,7 @@ class StackedShardedEngine:
             # REBOUND, never mutated: jnp.asarray may zero-copy alias the
             # numpy buffer, and an in-place write would race the async
             # dispatch reading it
-            prev = jnp.asarray(self._last_eval_now)
+            prev = jax.device_put(self._last_eval_now)
             self._last_eval_now = np.full(self.n_shards, self._now_host,
                                           np.float32)
             self.state = _stacked_write_extremal(
@@ -327,11 +337,14 @@ class StackedShardedEngine:
         """Answer one global read batch: shard-local pull sweeps, one psum to
         gather the per-shard answers. Raises for base ids no shard owns."""
         base_ids = np.asarray(base_ids)
-        unknown = [int(b) for b in base_ids
-                   if int(b) not in self._reader_owner]
-        if unknown:
+        ids64 = base_ids.astype(np.int64).reshape(-1)
+        known = np.zeros(len(ids64), bool)
+        inb = (ids64 >= 0) & (ids64 < len(self._reader_known))
+        known[inb] = self._reader_known[ids64[inb]]
+        if not known.all():
             raise ValueError(
-                f"read_batch: base ids {sorted(set(unknown))[:8]} are owned "
+                f"read_batch: base ids "
+                f"{sorted(set(map(int, ids64[~known])))[:8]} are owned "
                 f"by no shard (not readers of any shard overlay)")
         ids, valid = self._chunk(base_ids, None, batch_size)
         ans = _stacked_read(self.meta, self.agg, self.mesh, self.arrays,
@@ -392,10 +405,12 @@ class StackedShardedEngine:
         for b, n in r_edits:
             if n >= 0:
                 self._reader_owner[int(b)] = s
+                self._reader_known[int(b)] = True
             elif self._reader_owner.get(int(b)) == s:
                 # only the still-owning shard may unregister: a reader that
                 # MOVED shards may have been claimed by its new home already
                 self._reader_owner.pop(int(b), None)
+                self._reader_known[int(b)] = False
         if w_edits:
             self.writer_map = self._commit(
                 self._scatter_map_edits(self.writer_map, s, w_edits))

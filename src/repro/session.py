@@ -47,6 +47,7 @@ suite (``tests/test_session.py``) holds the session bit-identical to it.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Iterable, Mapping
 
 import numpy as np
@@ -55,18 +56,11 @@ from repro.core import dataflow as D
 from repro.core.aggregates import Aggregate, make_aggregate
 from repro.core.bipartite import Bipartite, build_bipartite
 from repro.core.dynamic import DynamicOverlay
-from repro.core.engine import EagrEngine
+from repro.core.engine import EagrEngine, bucket_batch
 from repro.core.vnm import construct_vnm
 from repro.core.window import WindowSpec
 
-__all__ = ["Query", "QueryHandle", "EagrSession"]
-
-
-def bucket_batch(n: int, floor: int = 16) -> int:
-    """Power-of-two batch bucketing: varying user batch sizes land on a
-    handful of padded shapes, so the jitted write/read programs retrace at
-    most log2(max_batch) times per engine instead of once per distinct size."""
-    return max(floor, 1 << (max(1, int(n)) - 1).bit_length())
+__all__ = ["Query", "QueryHandle", "EagrSession", "bucket_batch"]
 
 
 # ------------------------------------------------------------------- queries
@@ -144,6 +138,11 @@ class QueryHandle:
     spec: WindowSpec
     session: "EagrSession"
     group: "_EngineGroup"
+    # sorted array cache of `readers` for the vectorized scope check —
+    # lazily materialized by EagrSession.read (the handle is frozen, so the
+    # cache installs through object.__setattr__)
+    _reader_arr: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def readers(self) -> "frozenset[int] | None":
@@ -290,7 +289,9 @@ class EagrSession:
                  max_iterations: int = 3, seed: int = 0, threshold: int = 4,
                  split_limit: int = 5, hops: int = 1, pred=None,
                  neighborhood=None, write_freq=None, read_freq=None,
-                 calibrate: bool = False, adapt_every: int = 0):
+                 calibrate: bool = False, adapt_every: int = 0,
+                 ingest_depth: int | None = None,
+                 ingest_batch: int | None = None):
         bp = graph if isinstance(graph, Bipartite) else build_bipartite(
             graph, hops=hops, pred=pred, neighborhood=neighborhood)
         self.bipartite = bp
@@ -321,6 +322,17 @@ class EagrSession:
         self._rcount = np.zeros(self.n_base, np.float64)
         self._ops_since_adapt = 0
         self._pending = False
+        # streaming ingest (PR 7): depth 0 keeps the synchronous write path
+        # (one blocking-free dispatch per update, one tick per call); depth
+        # >= 1 routes `update` through an async IngestPipeline ring — see
+        # src/repro/streams/ingest.py for the coalescing/clock semantics
+        if ingest_depth is None:
+            ingest_depth = int(os.environ.get("EAGR_INGEST_DEPTH", "0") or 0)
+        if ingest_batch is None:
+            ingest_batch = int(os.environ.get("EAGR_INGEST_BATCH", "0") or 0)
+        self.ingest_depth = max(0, int(ingest_depth))
+        self.ingest_batch = int(ingest_batch) or 8192
+        self._pipeline = None
 
     # ------------------------------------------------------------- lifecycle
     def register(self, query: Query) -> QueryHandle:
@@ -343,6 +355,7 @@ class EagrSession:
         key = (agg, spec, bool(query.continuous))
         group = self._groups.get(key)
         if group is None:
+            self._retire_pipeline()  # the engine set is about to change
             group = _EngineGroup(self, key, agg, spec, bool(query.continuous))
             self._groups[key] = group
         handle = QueryHandle(qid=self._next_qid, query=query, agg=agg,
@@ -358,6 +371,7 @@ class EagrSession:
         del self._handles[handle.qid]
         handle.group.handles.remove(handle.qid)
         if not handle.group.handles:
+            self._retire_pipeline()  # the engine set is about to change
             del self._groups[handle.group.key]
         if not self._groups:
             self._value_dim = None  # nothing constrains the stream anymore
@@ -406,9 +420,12 @@ class EagrSession:
         if vals.shape != want:
             raise ValueError(f"update values shape {vals.shape} != {want} "
                              f"(session value_dim={self._value_dim})")
-        B = bucket_batch(len(ids))
-        for group in self._groups.values():
-            group.engine.write_batch(ids, vals, batch_size=B)
+        if self.ingest_depth:
+            self._ingest().submit(ids, vals)
+        else:
+            B = bucket_batch(len(ids))
+            for group in self._groups.values():
+                group.engine.write_batch(ids, vals, batch_size=B)
         if len(ids):
             self._grow_counts(int(ids.max()))
             np.add.at(self._wcount, ids, 1.0)
@@ -421,12 +438,24 @@ class EagrSession:
         self._check_handle(handle)
         if self._pending:
             self.flush()
+        if self._pipeline is not None:
+            # reads must observe every submitted event: dispatch the partial
+            # slot (no barrier — the read's data dependency on the engine
+            # state sequences it after every in-flight write step)
+            self._pipeline.drain()
         ids = np.asarray(ids, np.int64).reshape(-1)
         if handle.readers is not None:
-            outside = [int(b) for b in ids if int(b) not in handle.readers]
-            if outside:
+            arr = handle._reader_arr
+            if arr is None:
+                arr = np.fromiter(handle.readers, np.int64,
+                                  len(handle.readers))
+                arr.sort()
+                object.__setattr__(handle, "_reader_arr", arr)
+            inside = np.isin(ids, arr)
+            if not inside.all():
                 raise ValueError(
-                    f"read: base ids {sorted(set(outside))[:8]} are outside "
+                    f"read: base ids "
+                    f"{sorted(set(map(int, ids[~inside])))[:8]} are outside "
                     f"this query's readers scope")
         out = handle.group.engine.read_batch(ids,
                                              batch_size=bucket_batch(len(ids)))
@@ -474,6 +503,11 @@ class EagrSession:
         on genuine capacity overflow). Called automatically by the next
         ``update``/``read`` after a mutation; explicit calls let callers
         batch churn bursts. Returns per-group patch results."""
+        if self._pipeline is not None:
+            # pipeline barrier BEFORE patches land: writes submitted so far
+            # hit the plans they were routed against, and donated/aliased
+            # buffers are quiescent when the patch path swaps arrays
+            self._pipeline.flush()
         self._master.drain_delta()  # master only snapshots for late register
         results = [group.flush(self.growth)
                    for group in self._groups.values()]
@@ -484,9 +518,17 @@ class EagrSession:
         """Re-run the §4.8 frontier adaptation on every group against
         observed frequencies now (also triggered every ``adapt_every``
         operations). Returns the total number of decision flips."""
+        if self._pipeline is not None:
+            self._pipeline.flush()  # plans may swap underneath the ring
         if self._pending:
             self.flush()
         return sum(group.adapt() for group in self._groups.values())
+
+    @property
+    def ingest_stats(self):
+        """Live :class:`repro.streams.ingest.IngestStats` of the streaming
+        pipeline (``None`` until the first pipelined update)."""
+        return None if self._pipeline is None else self._pipeline.stats
 
     # ---------------------------------------------------------------- internal
     def _check_handle(self, handle) -> None:
@@ -495,12 +537,27 @@ class EagrSession:
             raise ValueError("unknown query handle (not registered with this "
                              "session, or already unregistered)")
 
+    def _ingest(self):
+        if self._pipeline is None:
+            from repro.streams.ingest import IngestPipeline
+            self._pipeline = IngestPipeline(
+                [g.engine for g in self._groups.values()],
+                depth=self.ingest_depth, device_batch=self.ingest_batch,
+                value_dim=self._value_dim or 1)
+        return self._pipeline
+
+    def _retire_pipeline(self) -> None:
+        """Barrier + drop the pipeline: the next pipelined update rebuilds
+        it over the current engine set."""
+        if self._pipeline is not None:
+            self._pipeline.flush()
+            self._pipeline = None
+
     def _tick(self) -> None:
         self._ops_since_adapt += 1
         if self.adapt_every and self._ops_since_adapt >= self.adapt_every:
             self._ops_since_adapt = 0
-            for group in self._groups.values():
-                group.adapt()
+            self.adapt()  # barriers the ingest ring before plans swap
 
     def _touch(self, *ids) -> None:
         self._pending = True

@@ -1,3 +1,4 @@
+from repro.streams.ingest import IngestPipeline, IngestStats
 from repro.streams.traces import (
     Trace,
     zipf_frequencies,
@@ -12,4 +13,6 @@ __all__ = [
     "generate_trace",
     "shift_workload",
     "batched_playback",
+    "IngestPipeline",
+    "IngestStats",
 ]

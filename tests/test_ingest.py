@@ -1,0 +1,275 @@
+"""Streaming ingest pipeline (PR 7): the async double-buffered ring must be
+BIT-identical to the synchronous write path at the same device-batch
+boundaries — scalar and vector payloads, sum and extremal/time windows,
+partial-slot drains — and it must inherit the substrate's transfer
+discipline (zero implicit host->device transfers in steady state). Plus the
+vectorized-routing invariants the pipeline rides on: the dense
+``BaseRoutes`` LUT tracks the bookkeeping dicts under churn, and default
+batches land on power-of-two compiled shapes only.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import EagrEngine, bucket_batch
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.session import EagrSession, Query
+from repro.streams.ingest import IngestPipeline
+
+
+# ---------------------------------------------------------------- fixtures
+def _basis(seed=3, n=150, e=900):
+    g = rmat_graph(n, e, seed=seed)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    dyn = DynamicOverlay.from_overlay(ov, bp.reader_input_sets())
+    return g, bp, dyn.to_overlay(prune=False)
+
+
+def _engine(basis, *, agg="sum", spec=None, all_push=False, **agg_kwargs):
+    if all_push:
+        dec = np.full(basis.n_nodes, D.PUSH, np.int64)
+    else:
+        n = max((o for o in basis.origin if o >= 0), default=0) + 1
+        wf = np.ones(n)
+        dec, _ = D.decide_mincut(basis, wf, wf.copy(),
+                                 D.cost_model_for("sum", window=4), window=4)
+    return EagrEngine(basis, dec, make_aggregate(agg, **agg_kwargs),
+                      spec or WindowSpec("tuple", 4), headroom=2.0)
+
+
+def _batches(eng, *, n_batches, arrival, value_dim=1, seed=7,
+             with_unknown=True):
+    """Zipf-free random write batches over known writer bases; every third
+    batch carries one unknown (droppable) base id to exercise masking."""
+    writers = np.flatnonzero(eng.plan.routes.writer_row >= 0)
+    unknown = np.flatnonzero(eng.plan.routes.writer_row < 0)
+    rng = np.random.default_rng(seed)
+    out = []
+    for k in range(n_batches):
+        ids = rng.choice(writers, size=arrival).astype(np.int64)
+        if with_unknown and len(unknown) and k % 3 == 0:
+            ids[0] = unknown[0]
+        shape = (arrival,) if value_dim == 1 else (arrival, value_dim)
+        vals = rng.integers(0, 8, shape).astype(np.float32)
+        out.append((ids, vals))
+    return out
+
+
+def _state_tuple(eng):
+    s = eng.state
+    return tuple(np.asarray(jax.device_get(x)) for x in
+                 (s.windows.values, s.windows.stamps, s.windows.head,
+                  s.windows.count, s.pao, s.now))
+
+
+def _assert_states_equal(a, b):
+    for x, y in zip(_state_tuple(a), _state_tuple(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def _sync_twin_drive(eng, batches, device_batch):
+    """The synchronous reference: identical events at identical device-batch
+    boundaries (full slots + one partial tail, exactly what the ring
+    dispatches)."""
+    ids = np.concatenate([i for i, _ in batches])
+    vals = np.concatenate([v for _, v in batches])
+    for off in range(0, len(ids), device_batch):
+        eng.write_batch(ids[off: off + device_batch],
+                        vals[off: off + device_batch],
+                        batch_size=device_batch)
+
+
+# ----------------------------------------------------------- bit parity
+@pytest.mark.parametrize("case", ["sum_scalar", "sum_vector", "max_time"])
+def test_pipeline_bit_identical_to_sync(case):
+    g, bp, basis = _basis()
+    if case == "sum_scalar":
+        make = lambda: _engine(basis)  # noqa: E731
+        vdim = 1
+    elif case == "sum_vector":
+        make = lambda: _engine(  # noqa: E731
+            basis, agg="sum", value_dim=3,
+            spec=WindowSpec("tuple", 4, value_dim=3))
+        vdim = 3
+    else:
+        make = lambda: _engine(  # noqa: E731
+            basis, agg="max", all_push=True,
+            spec=WindowSpec("time", 4, capacity=8))
+        vdim = 1
+
+    piped, sync = make(), make()
+    B = 64
+    # 11 arrival batches of 16 = 176 events: 2 full slots + a partial tail
+    batches = _batches(piped, n_batches=11, arrival=16, value_dim=vdim)
+
+    pipe = IngestPipeline([piped], depth=2, device_batch=B)
+    for ids, vals in batches:
+        pipe.submit(ids, vals)
+    pipe.flush()
+    _sync_twin_drive(sync, batches, B)
+
+    _assert_states_equal(piped, sync)
+    assert pipe.stats.events_in == 176
+    assert pipe.stats.partial_batches == 1
+
+    readers = np.flatnonzero(piped.plan.routes.reader_node >= 0)[:32]
+    np.testing.assert_array_equal(
+        piped.read_batch(readers, batch_size=32),
+        sync.read_batch(readers, batch_size=32))
+
+
+def test_drain_dispatches_partial_without_blocking():
+    g, bp, basis = _basis()
+    piped, sync = _engine(basis), _engine(basis)
+    batches = _batches(piped, n_batches=3, arrival=16, with_unknown=False)
+    pipe = IngestPipeline([piped], depth=2, device_batch=64)
+    for ids, vals in batches:
+        pipe.submit(ids, vals)
+    assert pipe.pending == 48
+    pipe.drain()  # partial slot dispatched, ring not barriered
+    assert pipe.pending == 0
+    assert pipe.stats.partial_batches == 1
+    _sync_twin_drive(sync, batches, 64)
+    # the read's data dependency on the engine state sequences it after the
+    # drained write — no flush needed for visibility
+    readers = np.flatnonzero(piped.plan.routes.reader_node >= 0)[:16]
+    np.testing.assert_array_equal(
+        piped.read_batch(readers, batch_size=16),
+        sync.read_batch(readers, batch_size=16))
+
+
+# ----------------------------------------------- session + churn ordering
+def test_session_pipeline_matches_sync_session_under_churn():
+    """Interleaved updates and add_edge/delete_edge through two sessions —
+    one pipelined (ingest_depth=2, device batch == update batch, so batch
+    boundaries match), one synchronous — must stay bit-comparable on reads,
+    and both must match the windows oracle. The churn flush is the pipeline
+    barrier: patches land only after every in-flight write step."""
+    g = rmat_graph(120, 700, seed=5)
+    spec = WindowSpec("tuple", 4)
+    piped = EagrSession(g, ingest_depth=2, ingest_batch=32)
+    sync = EagrSession(g)
+    hp = piped.register(Query(agg="sum", window=spec))
+    hs = sync.register(Query(agg="sum", window=spec))
+
+    rng = np.random.default_rng(11)
+    writers = np.array(sorted(piped.writers))
+    readers = np.array(sorted(set(piped.readers) & set(sync.readers)))
+
+    def mutate(step):
+        r = int(readers[step % len(readers)])
+        nbrs = piped.neighborhood(r)
+        if step % 2 and nbrs:
+            w = min(nbrs)
+            piped.delete_edge(w, r)
+            sync.delete_edge(w, r)
+        else:
+            w = int(writers[(step * 7) % len(writers)])
+            if w not in nbrs and w != r:
+                piped.add_edge(w, r)
+                sync.add_edge(w, r)
+
+    for step in range(8):
+        ids = rng.choice(writers, size=32).astype(np.int64)
+        vals = rng.integers(0, 8, 32).astype(np.float32)
+        piped.update(ids, vals)
+        sync.update(ids, vals)
+        if step % 3 == 0:
+            mutate(step)  # journaled; auto-flushes on the next update/read
+        sample = rng.choice(readers, size=8, replace=False)
+        np.testing.assert_array_equal(piped.read(hp, sample),
+                                      sync.read(hs, sample))
+
+    piped.flush()
+    sync.flush()
+    # oracle: answers straight from the writer windows, independent of the
+    # overlay and of the write path
+    eng = hp.group.engine
+    for r in map(int, readers[:5]):
+        want = eng.oracle_read(r, {r: piped.neighborhood(r)})
+        got = piped.read(hp, [r])[0]
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+# ------------------------------------------------------ transfer discipline
+def test_pipeline_steady_state_no_implicit_transfers():
+    """After warmup (compile + ring wrap) the pipeline must run entirely on
+    explicit ``device_put`` — the transfer guard turns any implicit
+    host->device transfer (stray np array or Python scalar reaching a jitted
+    body) into an error."""
+    g, bp, basis = _basis()
+    eng = _engine(basis)
+    pipe = IngestPipeline([eng], depth=2, device_batch=32)
+    batches = _batches(eng, n_batches=12, arrival=32)
+    for ids, vals in batches[:4]:  # compile both branches, wrap the ring
+        pipe.submit(ids, vals)
+    with jax.transfer_guard_host_to_device("disallow"):
+        for ids, vals in batches[4:]:
+            pipe.submit(ids, vals)
+        pipe.flush()
+    assert pipe.stats.batches == 12
+
+
+# --------------------------------------------------- routing + batch shapes
+def test_default_batch_size_buckets_compiled_shapes():
+    """``batch_size=None`` pads to the power-of-two ``bucket_batch`` bucket:
+    after warming one bucket, every smaller batch in that bucket reuses the
+    compiled program (no new jit cache entries)."""
+    from repro.core.engine import _read_body, _write_body_sum
+
+    assert [bucket_batch(n) for n in (1, 16, 17, 31, 32, 33)] == \
+        [16, 16, 32, 32, 32, 64]
+
+    g, bp, basis = _basis()
+    eng = _engine(basis)
+    writers = np.flatnonzero(eng.plan.routes.writer_row >= 0)
+    readers = np.flatnonzero(eng.plan.routes.reader_node >= 0)
+    ids = np.resize(writers, 32).astype(np.int64)
+    eng.write_batch(ids, np.ones(32, np.float32))  # warm the 32 bucket
+    eng.read_batch(np.resize(readers, 32))
+    c0 = (_write_body_sum._cache_size(), _read_body._cache_size())
+    for n in (17, 21, 31, 32):
+        eng.write_batch(ids[:n], np.ones(n, np.float32))
+        eng.read_batch(np.resize(readers, n))
+    assert (_write_body_sum._cache_size(), _read_body._cache_size()) == c0, \
+        "default-sized batches inside one bucket must not compile new shapes"
+
+
+def _assert_routes_match_dicts(plan):
+    r = plan.routes
+    for table, m in ((r.writer_row, plan.writer_row_of_base),
+                     (r.reader_node, plan.reader_node_of_base)):
+        want = np.full(len(table), -1, np.int32)
+        for b, v in m.items():
+            want[b] = v
+        np.testing.assert_array_equal(table, want)
+
+
+def test_routes_table_tracks_dicts_under_churn():
+    """The dense routing LUT (hot path) and the bookkeeping dicts
+    (authoritative) must agree after every patch: adds, deletes, node
+    retirement."""
+    g = rmat_graph(120, 700, seed=5)
+    sess = EagrSession(g)
+    h = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4)))
+    _assert_routes_match_dicts(h.group.engine.plan)
+
+    readers = sorted(sess.readers)
+    sess.add_edge(readers[0], readers[1])
+    sess.delete_edge(min(sess.neighborhood(readers[2])), readers[2])
+    sess.add_node(5000, in_neighbors=[readers[0]], out_readers=[readers[1]])
+    sess.flush()
+    _assert_routes_match_dicts(h.group.engine.plan)
+
+    sess.delete_node(5000)
+    sess.flush()
+    _assert_routes_match_dicts(h.group.engine.plan)
+    sess.update([readers[1]], [2.0])  # the patched plan still routes
+    assert np.isfinite(sess.read(h, [readers[1]])[0])
