@@ -15,6 +15,7 @@ from benchmarks.harness.export import export_trajectory
 from benchmarks.harness.run_local import (
     Phases,
     env_fingerprint,
+    frontier_summary,
     percentiles,
     sustained,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "export_trajectory",
     "Phases",
     "env_fingerprint",
+    "frontier_summary",
     "percentiles",
     "sustained",
     "Watchdog",

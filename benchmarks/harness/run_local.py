@@ -75,6 +75,25 @@ def percentiles(samples_s: list[float],
     return out
 
 
+def frontier_summary(counts: list[int]) -> dict:
+    """Frontier-size distribution from an engine's ``frontier_log``: each
+    write step contributed its active-block capacity K (sparse) or ``-1``
+    (dense fallback). Reports how sparse the write path actually ran plus
+    p50/p99 of the active-block count over the sparse steps."""
+    sparse = sorted(k for k in counts if k >= 0)
+    out = {
+        "steps": len(counts),
+        "dense_steps": sum(1 for k in counts if k < 0),
+        "sparse_steps": len(sparse),
+    }
+    if sparse:
+        out["p50_blocks"] = sparse[min(len(sparse) - 1,
+                                       round(0.50 * (len(sparse) - 1)))]
+        out["p99_blocks"] = sparse[min(len(sparse) - 1,
+                                       round(0.99 * (len(sparse) - 1)))]
+    return out
+
+
 def sustained(step, *, duration_s: float, barrier=None) -> dict:
     """Sustained-throughput loop: call ``step(i) -> events`` repeatedly for
     at least ``duration_s`` of wall clock, then run ``barrier()`` (e.g. a

@@ -68,6 +68,7 @@ from repro.kernels.segment_agg.ops import (
     E_BLK,
     R_BLK,
     make_leveled_plan,
+    segment_agg_active,
     segment_agg_level,
 )
 
@@ -218,6 +219,8 @@ class PlanMeta:
     n_row_tiles: int
     backend: str
     interpret: bool
+    bf16: bool = False   # EAGR_SEGAGG_BF16: edge values stream as bfloat16
+                         # (2x VMEM headroom); accumulation stays fp32
 
 
 @dataclasses.dataclass
@@ -243,6 +246,12 @@ class ExecPlan:
     host: object | None = None           # plan_patch.PlanHost mirror (lazy);
                                          # owned by the incremental patch path
     patches_applied: int = 0
+    frontier: object | None = None       # frontier.FrontierIndex — writer-row
+                                         # -> per-level push blocks, built
+                                         # lazily on first sparse write
+    reader_frontier: object | None = None  # frontier.ReaderFrontierIndex —
+                                           # read-path twin; invalidated by
+                                           # any structural patch
 
     @property
     def n_nodes(self) -> int:
@@ -395,6 +404,7 @@ def compile_plan(overlay: Overlay, decisions: np.ndarray, *,
         n_row_tiles=max(1, -(-n_nodes // R_BLK)),
         backend=backend,
         interpret=(backend == "pallas" and jax.default_backend() != "tpu"),
+        bf16=os.environ.get("EAGR_SEGAGG_BF16", "0").strip() == "1",
     )
     arrays = PlanArrays(
         decision=jnp.asarray(dec_pad, jnp.int32),
@@ -475,8 +485,12 @@ def _level_reduce(meta: PlanMeta, tables: LevelTables, l, val: jnp.ndarray,
         out = segment_agg_level(
             xk, seg, tables.tile_of_block[l], tables.first_of_tile[l],
             n_rows=meta.n_nodes, n_row_tiles=meta.n_row_tiles,
-            op=kern_op, interpret=meta.interpret)
+            op=kern_op, interpret=meta.interpret, bf16=meta.bf16)
         return -out if op == "min" else out
+    if meta.bf16:
+        # match the pallas bf16 semantics: edge values rounded to bfloat16,
+        # the segment reduction itself in fp32
+        x = x.astype(jnp.bfloat16).astype(jnp.float32)
     dst = jnp.where(seg >= 0, seg, meta.n_nodes)
     if op == "sum":
         out = jax.ops.segment_sum(x, dst, num_segments=meta.n_nodes + 1)
@@ -485,6 +499,61 @@ def _level_reduce(meta: PlanMeta, tables: LevelTables, l, val: jnp.ndarray,
     else:
         out = jax.ops.segment_min(x, dst, num_segments=meta.n_nodes + 1)
     return out[: meta.n_nodes]
+
+
+# --------------------------------------------------- frontier-sparse execution
+def _gather_active(meta: PlanMeta, tables: LevelTables, l, active_l):
+    """Compact one level's edge tables to its K active blocks. ``active_l``
+    is (K,) int32 ascending block indices, padded with ``n_blocks`` —
+    padding lanes gather a real block but are neutralized to the slot-padding
+    pattern (seg -1, src 0, sign 0) every backend already drops."""
+    nb = tables.tile_of_block.shape[1]
+    ab = jnp.minimum(active_l, nb - 1)
+    valid = (active_l < nb)[:, None]
+    seg_c = jnp.where(valid, tables.seg[l].reshape(nb, E_BLK)[ab], -1)
+    src_c = jnp.where(valid, tables.src[l].reshape(nb, E_BLK)[ab], 0)
+    sign_c = jnp.where(valid, tables.sign[l].reshape(nb, E_BLK)[ab], 0.0)
+    tob_c = tables.tile_of_block[l][ab]
+    return (seg_c.reshape(-1), src_c.reshape(-1), sign_c.reshape(-1), tob_c)
+
+
+def _level_reduce_active(meta: PlanMeta, seg_c, src_c, sign_c, tob_c,
+                         val: jnp.ndarray, op: str) -> jnp.ndarray:
+    """``_level_reduce`` over a compacted active-block edge subset: the
+    gather, the kernel grid, and the segment reduction all shrink from the
+    level's padded edge capacity to K*E_BLK."""
+    x = val[src_c]
+    if op == "sum":
+        x = x * sign_c[:, None]
+    if meta.backend == "pallas":
+        kern_op = "max" if op in ("max", "min") else "sum"
+        xk = -x if op == "min" else x
+        out = segment_agg_active(
+            xk, seg_c, tob_c, n_rows=meta.n_nodes,
+            n_row_tiles=meta.n_row_tiles, op=kern_op,
+            interpret=meta.interpret, bf16=meta.bf16)
+        return -out if op == "min" else out
+    if meta.bf16:
+        x = x.astype(jnp.bfloat16).astype(jnp.float32)
+    dst = jnp.where(seg_c >= 0, seg_c, meta.n_nodes)
+    if op == "sum":
+        out = jax.ops.segment_sum(x, dst, num_segments=meta.n_nodes + 1)
+    elif op == "max":
+        out = jax.ops.segment_max(x, dst, num_segments=meta.n_nodes + 1)
+    else:
+        out = jax.ops.segment_min(x, dst, num_segments=meta.n_nodes + 1)
+    return out[: meta.n_nodes]
+
+
+def _row_active(meta: PlanMeta, seg_c) -> jnp.ndarray:
+    """(n_nodes,) bool: destinations with at least one active edge this
+    level. The sparse twin of ``touched`` — the index guarantees any
+    destination with a nonzero/changed contribution has its *whole* slot
+    range active, so masking to these rows is exact, and rows sharing a
+    block with the frontier but outside it see only zero contributions."""
+    dst = jnp.where(seg_c >= 0, seg_c, meta.n_nodes)
+    return jnp.zeros((meta.n_nodes + 1,), bool).at[dst].set(
+        True, mode="promise_in_bounds")[: meta.n_nodes]
 
 
 def _level_loop(meta: PlanMeta, body, init):
@@ -612,6 +681,123 @@ def read_step(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
     return agg.finalize(answers), answers
 
 
+# Frontier-sparse twins of the step bodies: identical math, but each level
+# gathers only the batch frontier's active edge blocks (``active`` is the
+# (L, K) host-expanded block list — see ``core/frontier.py`` for why a
+# superset of the reachable blocks is bit-identical to the dense sweep).
+# One cached trace per (batch bucket, K bucket); callers fall back to the
+# dense bodies when the frontier is too dense to pay for the gather.
+def write_step_sum_sparse(meta: PlanMeta, agg: Aggregate, spec: WindowSpec,
+                          arrays: PlanArrays, state: EngineState, rows, vals,
+                          mask, active):
+    windows, evicted, evicted_valid = apply_writes(
+        state.windows, spec, rows, vals,
+        jnp.full(rows.shape, state.now, jnp.float32), mask)
+    delta_w = agg.lift(vals) * mask[:, None].astype(jnp.float32)
+    delta_w -= agg.lift(evicted) * evicted_valid[:, None].astype(jnp.float32)
+    delta = jnp.zeros((meta.n_nodes, agg.pao_dim), dtype=jnp.float32)
+    delta = delta.at[arrays.writer_node[rows]].add(delta_w, mode="drop")
+
+    # Python unroll, not fori_loop: the active tuple is ragged (one bucketed
+    # width per level), and levels whose frontier is empty cost nothing
+    for l in range(meta.n_levels):
+        if active[l].shape[0] == 0:
+            continue
+        seg_c, src_c, sign_c, tob_c = _gather_active(
+            meta, arrays.push, l, active[l])
+        contrib = _level_reduce_active(
+            meta, seg_c, src_c, sign_c, tob_c, delta, "sum")
+        ra = arrays.push.touched[l] & _row_active(meta, seg_c)
+        delta = delta + jnp.where(ra[:, None], contrib, 0.0)
+    pao = state.pao + delta
+    return EngineState(windows, pao, state.now + 1.0)
+
+
+def write_step_extremal_sparse(meta: PlanMeta, agg: Aggregate,
+                               spec: WindowSpec, arrays: PlanArrays,
+                               state: EngineState, rows, vals, mask,
+                               prev_now, active):
+    windows, _, _ = apply_writes(
+        state.windows, spec, rows, vals,
+        jnp.full(rows.shape, state.now, jnp.float32), mask)
+    wp = window_pao(windows, spec, agg, now=state.now)
+    written = jnp.zeros((meta.n_writers,), bool).at[rows].max(mask, mode="drop")
+    if spec.kind == "time":
+        touched_w = written | stale_rows(state.windows, spec, prev_now, state.now)
+    else:
+        touched_w = written
+    old_w = state.pao[jnp.minimum(arrays.writer_node, meta.n_nodes - 1)]
+    new_w = jnp.where(touched_w[:, None], wp, old_w)
+    pao = state.pao.at[arrays.writer_node].set(new_w, mode="drop")
+    changed = jnp.zeros((meta.n_nodes + 1,), bool)
+    changed = changed.at[arrays.writer_node].max(touched_w, mode="promise_in_bounds")
+
+    for l in range(meta.n_levels):  # ragged active tuple: Python unroll
+        if active[l].shape[0] == 0:
+            continue
+        seg_c, src_c, sign_c, tob_c = _gather_active(
+            meta, arrays.push, l, active[l])
+        new = _level_reduce_active(
+            meta, seg_c, src_c, sign_c, tob_c, pao, agg.combine)
+        dst = jnp.where(seg_c >= 0, seg_c, meta.n_nodes)
+        ch = jax.ops.segment_max(
+            changed[src_c].astype(jnp.int32), dst,
+            num_segments=meta.n_nodes + 1) > 0
+        upd = arrays.push.touched[l] & ch[: meta.n_nodes]
+        pao = jnp.where(upd[:, None], new, pao)
+        changed = changed.at[: meta.n_nodes].max(upd)
+    return EngineState(windows, pao, state.now + 1.0)
+
+
+DEM_CHUNK = 256  # demand slots per active chunk (d_pad is a multiple of 256)
+
+
+def read_step_sparse(meta: PlanMeta, agg: Aggregate, arrays: PlanArrays,
+                     state: EngineState, reader_nodes, mask, dem_active,
+                     pull_active):
+    """``read_step`` with the demand up-sweep restricted to active
+    DEM_CHUNK-slot chunks and the pull down-sweep to active edge blocks —
+    both expanded host-side from ``ReaderFrontierIndex``."""
+    decision = arrays.decision
+    nc = arrays.demand_dst.shape[1] // DEM_CHUNK
+    demand = jnp.zeros((meta.n_nodes + 1,), dtype=jnp.bool_)
+    is_pull_target = mask & (decision[reader_nodes] == PULL)
+    demand = demand.at[reader_nodes].max(is_pull_target)
+
+    # d_pad below one chunk means the plan has no real demand pairs at all
+    # (compile_plan only leaves d_pad=1 when d_real == 0): the sweep is a
+    # no-op, and reshaping to (0, DEM_CHUNK) chunks would be ill-formed.
+    # Python unroll over the ragged active tuples, dst level descending;
+    # levels with no active chunks cost nothing
+    if nc:
+        for l in range(meta.n_levels - 1, -1, -1):
+            if dem_active[l].shape[0] == 0:
+                continue
+            ac = jnp.minimum(dem_active[l], nc - 1)
+            validc = (dem_active[l] < nc)[:, None]
+            dsts = jnp.where(
+                validc, arrays.demand_dst[l].reshape(nc, DEM_CHUNK)[ac],
+                meta.n_nodes).reshape(-1)
+            srcs = jnp.where(
+                validc, arrays.demand_src[l].reshape(nc, DEM_CHUNK)[ac],
+                meta.n_nodes).reshape(-1)
+            demand = demand.at[srcs].max(demand[dsts])
+    take = (demand[: meta.n_nodes] & (decision == PULL))[:, None]
+    val = state.pao
+
+    for l in range(meta.n_levels):  # level ascending
+        if pull_active[l].shape[0] == 0:
+            continue
+        seg_c, src_c, sign_c, tob_c = _gather_active(
+            meta, arrays.pull, l, pull_active[l])
+        computed = _level_reduce_active(
+            meta, seg_c, src_c, sign_c, tob_c, val, agg.combine)
+        ra = arrays.pull.touched[l] & _row_active(meta, seg_c)
+        val = jnp.where(take & ra[:, None], computed, val)
+    answers = val[reader_nodes]
+    return agg.finalize(answers), answers
+
+
 # Single-engine jitted entry points over the pure step bodies. The write
 # bodies donate the engine state: the window/PAO buffers are rewritten in
 # place (callers always rebind ``eng.state`` to the result — the consumed
@@ -621,9 +807,17 @@ _write_body_sum = functools.partial(
     jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))(write_step_sum)
 _write_body_extremal = functools.partial(
     jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))(write_step_extremal)
+_write_body_sum_sparse = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2),
+    donate_argnums=(4,))(write_step_sum_sparse)
+_write_body_extremal_sparse = functools.partial(
+    jax.jit, static_argnums=(0, 1, 2),
+    donate_argnums=(4,))(write_step_extremal_sparse)
 _refresh_pao = functools.partial(
     jax.jit, static_argnums=(0, 1, 2))(refresh_pao_step)
 _read_body = functools.partial(jax.jit, static_argnums=(0, 1))(read_step)
+_read_body_sparse = functools.partial(
+    jax.jit, static_argnums=(0, 1))(read_step_sparse)
 
 
 # ------------------------------------------------------------- stacked pytrees
@@ -676,6 +870,9 @@ class EagrEngine:
         self._now_host = 0.0
         self._last_eval_now = 0.0
         self._expiry: list[float] = []
+        # per write step: K (active-block capacity) for sparse steps, -1 for
+        # dense — the frontier-size distribution the bench harness reports
+        self.frontier_log: list[int] = []
 
     def _rebind(self) -> None:
         """(Re)bind the jitted bodies to the current plan arrays. Called at
@@ -686,8 +883,14 @@ class EagrEngine:
                 else _write_body_extremal)
         self._write = functools.partial(
             body, self.plan.meta, self.agg, self.spec, self.plan.arrays)
+        body_sp = (_write_body_sum_sparse if self.agg.combine == "sum"
+                   else _write_body_extremal_sparse)
+        self._write_sparse = functools.partial(
+            body_sp, self.plan.meta, self.agg, self.spec, self.plan.arrays)
         self._read = functools.partial(
             _read_body, self.plan.meta, self.agg, self.plan.arrays)
+        self._read_sparse = functools.partial(
+            _read_body_sparse, self.plan.meta, self.agg, self.plan.arrays)
 
     def init_state(self) -> EngineState:
         windows = init_windows(self.plan.meta.n_writers, self.spec)
@@ -753,8 +956,47 @@ class EagrEngine:
                 [values, np.zeros((pad,) + values.shape[1:], np.float32)])
         self.write_rows(rows, values, mask, n_live=n_live)
 
+    def frontier_active(self, rows: np.ndarray, mask: np.ndarray,
+                        n_live: int | None = None):
+        """Decide + expand this batch's frontier: the ragged per-level
+        active-block tuple for the sparse write bodies, or ``None`` for the
+        dense sweep. ``None`` whenever sparseness can't be exact (the
+        xla_unrolled baseline backend; an extremal time window with entries
+        expiring outside the batch) or can't pay (EAGR_SPARSE_WRITE=0; auto
+        mode with a large batch or a frontier past the density threshold).
+        Builds the plan's ``FrontierIndex`` lazily on first use."""
+        from repro.core import frontier as F
+
+        mode = F.sparse_mode()
+        meta = self.plan.meta
+        if mode == "0" or meta.backend == "xla_unrolled":
+            return None
+        if self.agg.combine != "sum" and self.spec.kind == "time" and \
+                self._expiry and \
+                self._expiry[0] < self._now_host - self.spec.size:
+            # rows expire at this eval instant: the touched set exceeds the
+            # batch frontier, only the dense sweep sees all of it
+            return None
+        if n_live is None:
+            n_live = int(np.count_nonzero(mask))
+        if n_live == 0:
+            return None
+        density = None
+        if mode == "auto":
+            nb = self.plan.arrays.push.tile_of_block.shape[1]
+            if nb < 8 or n_live > F.sparse_rowfrac() * meta.n_writers:
+                return None  # frontier ~ overlay: expansion can't win
+            density = F.sparse_density()
+        exact = self.agg.combine == "sum"
+        if self.plan.frontier is None or self.plan.frontier.exact != exact:
+            self.plan.frontier = F.FrontierIndex.build(self.plan,
+                                                       exact=exact)
+        rows_u = np.unique(np.asarray(rows)[np.asarray(mask, bool)])
+        return self.plan.frontier.expand(rows_u, density=density)
+
     def write_rows(self, rows: np.ndarray, vals: np.ndarray,
-                   mask: np.ndarray, *, n_live: int | None = None) -> None:
+                   mask: np.ndarray, *, n_live: int | None = None,
+                   active="auto") -> None:
         """Pre-routed write dispatch: ``rows`` are window rows (see
         ``ExecPlan.routes``), masked lanes carry row 0 / value 0 and the
         batch is already padded to its compiled shape. This is the ingest
@@ -762,15 +1004,32 @@ class EagrEngine:
         triple, then the async jitted step (no implicit transfers, no host
         sync: the call returns while the device step runs). ``n_live``
         (host-side count of live lanes) feeds the extremal expiry-heap
-        bookkeeping; it defaults to a reduction of ``mask``."""
+        bookkeeping; it defaults to a reduction of ``mask``. ``active``
+        selects the step: ``"auto"`` asks :meth:`frontier_active`, ``None``
+        forces the dense sweep, and a per-level active-block tuple runs the
+        frontier-sparse bodies over exactly those edge blocks (the ingest
+        pipeline passes its own pre-expanded tuple)."""
         if n_live is None:
             n_live = int(np.count_nonzero(mask))
+        if isinstance(active, str):
+            active = self.frontier_active(rows, mask, n_live=n_live)
+        self.frontier_log.append(
+            -1 if active is None else sum(a.shape[0] for a in active))
+        if len(self.frontier_log) > (1 << 20):
+            del self.frontier_log[: (1 << 19)]
         rows_d, vals_d, mask_d = jax.device_put(
             (np.ascontiguousarray(rows, np.int32),
              np.ascontiguousarray(vals, np.float32),
              np.ascontiguousarray(mask, bool)))
+        if active is not None:
+            act_d = jax.device_put(tuple(
+                np.ascontiguousarray(a, np.int32) for a in active))
         if self.agg.combine == "sum":
-            self.state = self._write(self.state, rows_d, vals_d, mask_d)
+            if active is None:
+                self.state = self._write(self.state, rows_d, vals_d, mask_d)
+            else:
+                self.state = self._write_sparse(self.state, rows_d, vals_d,
+                                                mask_d, act_d)
         else:
             if self.spec.kind == "time":
                 if n_live:
@@ -780,8 +1039,13 @@ class EagrEngine:
                     heapq.heappop(self._expiry)  # reflected by this refresh
             prev = self._last_eval_now
             self._last_eval_now = self._now_host
-            self.state = self._write(self.state, rows_d, vals_d, mask_d,
-                                     jax.device_put(np.float32(prev)))
+            prev_d = jax.device_put(np.float32(prev))
+            if active is None:
+                self.state = self._write(self.state, rows_d, vals_d, mask_d,
+                                         prev_d)
+            else:
+                self.state = self._write_sparse(self.state, rows_d, vals_d,
+                                                mask_d, prev_d, act_d)
         self._now_host += 1.0
 
     # -------------------------------------------------- structural updates
@@ -866,12 +1130,41 @@ class EagrEngine:
         B = batch_size or bucket_batch(len(nodes))
         if B < len(nodes):
             raise ValueError(f"batch_size={B} < batch of {len(nodes)}")
+        act = self._reader_active(nodes)
         pad = B - len(nodes)
         mask = np.concatenate([np.ones(len(nodes), bool), np.zeros(pad, bool)])
         nodes = np.concatenate([nodes, np.zeros(pad, np.int32)])
         nodes_d, mask_d = jax.device_put((nodes, mask))
-        ans, _ = self._read(self.state, nodes_d, mask_d)
+        if act is None:
+            ans, _ = self._read(self.state, nodes_d, mask_d)
+        else:
+            dem_d, pull_d = jax.device_put(
+                (tuple(np.ascontiguousarray(a, np.int32) for a in act[0]),
+                 tuple(np.ascontiguousarray(a, np.int32) for a in act[1])))
+            ans, _ = self._read_sparse(self.state, nodes_d, mask_d,
+                                       dem_d, pull_d)
         return np.asarray(jax.device_get(ans))[: len(base_ids)]
+
+    def _reader_active(self, nodes: np.ndarray):
+        """Read-path twin of :meth:`frontier_active`: ``(dem_active,
+        pull_active)`` chunk/block arrays for the sparse demand + pull
+        sweeps, or ``None`` for the dense read. Auto mode only pays for the
+        expansion on small reader batches."""
+        from repro.core import frontier as F
+
+        mode = F.sparse_mode()
+        meta = self.plan.meta
+        if mode == "0" or meta.backend == "xla_unrolled":
+            return None
+        density = None
+        if mode == "auto":
+            if len(nodes) > F.sparse_rowfrac() * meta.n_nodes:
+                return None
+            density = F.sparse_density()
+        if self.plan.reader_frontier is None:
+            self.plan.reader_frontier = F.ReaderFrontierIndex.build(self.plan)
+        return self.plan.reader_frontier.expand(np.unique(nodes),
+                                                density=density)
 
     # --------------------------------------------------------------- oracle
     def oracle_read(self, base_id: int, reader_inputs: dict[int, set[int]]):

@@ -699,6 +699,10 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
         host.decision = np.concatenate(
             [host.decision, np.full(extra, PULL, np.int64)])
         host.level = np.concatenate([host.level, np.zeros(extra, np.int64)])
+    # pre-patch in-edges of the re-homed nodes: frontier maintenance walks
+    # *up* through both the old and new parents so writers that lost a path
+    # to a destination are re-indexed too
+    old_in = {nid: list(host.in_edges[nid]) for nid in delta.nodes}
     for nid, patch in delta.nodes.items():
         for s, _ in host.in_edges[nid]:
             host.out[s].remove(nid)
@@ -857,6 +861,20 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     plan.n_pull_edges = host.pull.n_edges()
     plan.patches_applied += 1
     _apply_base_maps(plan, host, delta)
+    # frontier bookkeeping: the reader index is cheap to rebuild and hard to
+    # maintain (demand chunk positions move) — drop it on any patch. The
+    # write index survives slot-level patches via exact per-writer overrides;
+    # a level relayout moves every slot of that level wholesale, so it
+    # invalidates the whole index (rebuilt lazily on the next sparse write).
+    plan.reader_frontier = None
+    if plan.frontier is not None:
+        if rebuild["push"]:
+            plan.frontier = None
+        else:
+            from repro.core.frontier import maintain_frontier
+            maintain_frontier(plan.frontier, plan, host, rehome, old_in)
+            if host.auto_verify:
+                plan.frontier.verify(plan, host)
     if host.auto_verify:
         host.verify_device(plan)
     return PatchResult(plan, False, None, None, retired_rows, stats,

@@ -47,7 +47,9 @@ from repro.core.engine import (
     read_step,
     stack_plan_arrays,
     write_step_extremal,
+    write_step_extremal_sparse,
     write_step_sum,
+    write_step_sum_sparse,
 )
 from repro.core.plan_patch import _OOB, _bucket, apply_patch_program
 from repro.core.window import (
@@ -121,6 +123,45 @@ def _stacked_write_extremal(meta, agg, spec, mesh, arrays, state, wmap,
 
     return _run_stacked(mesh, body,
                         (arrays, state, wmap, ids, vals, valid, prev_now))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _stacked_write_sum_sparse(meta, agg, spec, mesh, arrays, state, wmap,
+                              ids, vals, valid, active):
+    """Frontier-sparse twin of ``_stacked_write_sum``: each shard's slice of
+    ``active`` (a per-level tuple of (S, K_l) arrays) is the host-expanded
+    active-block list for that shard's own plan — the batch is still
+    globally all-gathered, but each shard's level sweep only touches its own
+    reachable blocks."""
+    def body(arrays, state, wmap, ids_c, vals_c, valid_c, act):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        vals = lax.all_gather(vals_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        rows = wmap[jnp.clip(ids, 0, wmap.shape[0] - 1)]
+        mask = valid & (rows >= 0)
+        return write_step_sum_sparse(meta, agg, spec, arrays, state,
+                                     jnp.maximum(rows, 0), vals, mask, act)
+
+    return _run_stacked(mesh, body,
+                        (arrays, state, wmap, ids, vals, valid, active))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _stacked_write_extremal_sparse(meta, agg, spec, mesh, arrays, state,
+                                   wmap, ids, vals, valid, prev_now, active):
+    def body(arrays, state, wmap, ids_c, vals_c, valid_c, prev, act):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        vals = lax.all_gather(vals_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        rows = wmap[jnp.clip(ids, 0, wmap.shape[0] - 1)]
+        mask = valid & (rows >= 0)
+        return write_step_extremal_sparse(meta, agg, spec, arrays, state,
+                                          jnp.maximum(rows, 0), vals, mask,
+                                          prev, act)
+
+    return _run_stacked(
+        mesh, body,
+        (arrays, state, wmap, ids, vals, valid, prev_now, active))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -303,19 +344,72 @@ class StackedShardedEngine:
         return out
 
     # -------------------------------------------------------------- execution
+    def _frontier_active(self, base_ids: np.ndarray):
+        """Per-shard frontier expansion for one global batch: a ragged
+        per-level tuple of stacked (S, K_l) active-block arrays, or ``None``
+        for the dense stacked sweep. All shards must go sparse together (one
+        program runs the whole stack), sharing each level's max bucketed
+        width; shard plans are aligned, so one block count pads every slice.
+        Extremal time windows stay dense — the stacked path has no
+        expiry-heap bookkeeping to bound the stale set."""
+        from repro.core import frontier as F
+
+        mode = F.sparse_mode()
+        if mode == "0" or self.meta.backend == "xla_unrolled":
+            return None
+        if self.agg.combine != "sum" and self.spec.kind == "time":
+            return None
+        ids = np.asarray(base_ids, np.int64).reshape(-1)
+        acts = []
+        for p in self.sharded.shard_plans:
+            rows, mask = p.routes.writer_rows(ids)
+            density = None
+            if mode == "auto":
+                nb = p.arrays.push.tile_of_block.shape[1]
+                n_live = int(np.count_nonzero(mask))
+                if nb < 8 or n_live > F.sparse_rowfrac() * p.meta.n_writers:
+                    return None
+                density = F.sparse_density()
+            exact = self.agg.combine == "sum"
+            if p.frontier is None or p.frontier.exact != exact:
+                p.frontier = F.FrontierIndex.build(p, exact=exact)
+            act = p.frontier.expand(np.unique(rows[mask]), density=density)
+            if act is None:
+                return None
+            acts.append(act)
+        nb = self.sharded.shard_plans[0].arrays.push.tile_of_block.shape[1]
+        out = []
+        for l in range(len(acts[0])):
+            K = max(a[l].shape[0] for a in acts)  # max of bucketed widths
+            out.append(np.stack([
+                np.pad(a[l], (0, K - a[l].shape[0]), constant_values=nb)
+                for a in acts]).astype(np.int32))
+        return tuple(out)
+
     def write_batch(self, base_ids: np.ndarray, values: np.ndarray,
                     batch_size: int | None = None) -> None:
         """Apply one *global* write batch. Every shard sees the whole batch
         (the paper's write replication) and keeps the writes it consumes;
         writes owned by no shard are dropped on-device, like the single
-        engine drops writes that feed no reader."""
+        engine drops writes that feed no reader. When every shard's batch
+        frontier expands (``EAGR_SPARSE_WRITE``), the level sweeps run the
+        frontier-sparse bodies over the stacked active-block lists."""
         base_ids = np.asarray(base_ids)
         values = np.asarray(values, np.float32)
+        active = self._frontier_active(base_ids)
         ids, valid, vals = self._chunk(base_ids, values, batch_size)
+        if active is not None:
+            act_d = jax.device_put(tuple(
+                np.ascontiguousarray(a) for a in active))
         if self.agg.combine == "sum":
-            self.state = _stacked_write_sum(
-                self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                self.state, self.writer_map, ids, vals, valid)
+            if active is None:
+                self.state = _stacked_write_sum(
+                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                    self.state, self.writer_map, ids, vals, valid)
+            else:
+                self.state = _stacked_write_sum_sparse(
+                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                    self.state, self.writer_map, ids, vals, valid, act_d)
         else:
             # unlike EagrEngine there is no all-dropped-batch skip (a global
             # batch always dispatches), so no expiry-deadline bookkeeping —
@@ -327,9 +421,15 @@ class StackedShardedEngine:
             prev = jax.device_put(self._last_eval_now)
             self._last_eval_now = np.full(self.n_shards, self._now_host,
                                           np.float32)
-            self.state = _stacked_write_extremal(
-                self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                self.state, self.writer_map, ids, vals, valid, prev)
+            if active is None:
+                self.state = _stacked_write_extremal(
+                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                    self.state, self.writer_map, ids, vals, valid, prev)
+            else:
+                self.state = _stacked_write_extremal_sparse(
+                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                    self.state, self.writer_map, ids, vals, valid, prev,
+                    act_d)
         self._now_host += 1.0
 
     def read_batch(self, base_ids: np.ndarray,

@@ -328,7 +328,8 @@ def make_leveled_plan(segs: list[np.ndarray], n_rows: int, *,
 
 def segment_agg_level(x: jnp.ndarray, seg: jnp.ndarray, tob: jnp.ndarray,
                       fot: jnp.ndarray, *, n_rows: int, n_row_tiles: int,
-                      op: str = "sum", interpret: bool = True) -> jnp.ndarray:
+                      op: str = "sum", interpret: bool = True,
+                      bf16: bool = False) -> jnp.ndarray:
     """Run the kernel on one level of a ``LeveledPlan``.
 
     ``x`` is (e_pad, F) edge values already in the level's padded slot order
@@ -337,10 +338,42 @@ def segment_agg_level(x: jnp.ndarray, seg: jnp.ndarray, tob: jnp.ndarray,
     traced — in particular slices of the stacked tables inside a loop over
     levels. Returns (n_rows, F); rows the level never touches are whatever the
     kernel initialized them to, so callers mask by their own touched set.
+    ``bf16`` streams edge values into VMEM as bfloat16 (2x block headroom);
+    the kernels cast per block and accumulate in fp32 either way.
     """
     F = x.shape[1]
     f_pad = -(-F // F_BLK) * F_BLK
-    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, f_pad - F)))
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    xf = jnp.pad(x.astype(dt), ((0, 0), (0, f_pad - F)))
+    out = segment_agg_call(
+        xf, seg, tob, fot,
+        n_row_tiles=n_row_tiles, n_feat_tiles=f_pad // F_BLK,
+        op=op, interpret=interpret,
+    )
+    return out[:n_rows, :F]
+
+
+def segment_agg_active(x: jnp.ndarray, seg: jnp.ndarray, tob: jnp.ndarray, *,
+                       n_rows: int, n_row_tiles: int, op: str = "sum",
+                       interpret: bool = True,
+                       bf16: bool = False) -> jnp.ndarray:
+    """Run the kernel on a *compacted* active-block subset of one level.
+
+    ``x`` (K*E_BLK, F), ``seg`` (K*E_BLK,) and ``tob`` (K,) are the gathered
+    slices of the K active edge blocks, in ascending block order — an
+    ascending subset of a sorted level stays sorted, and ``tob`` stays
+    non-decreasing, so the kernel's consecutive-revisit invariant holds and
+    the grid (which is sized from ``x``) simply shrinks to K blocks. The
+    first-of-tile flags are recomputed from the compacted ``tob`` (a tile's
+    first *active* block initializes it). Output rows in tiles with no active
+    block are uninitialized — callers mask by the active destination set.
+    """
+    fot = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                           (tob[1:] != tob[:-1]).astype(jnp.int32)])
+    F = x.shape[1]
+    f_pad = -(-F // F_BLK) * F_BLK
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    xf = jnp.pad(x.astype(dt), ((0, 0), (0, f_pad - F)))
     out = segment_agg_call(
         xf, seg, tob, fot,
         n_row_tiles=n_row_tiles, n_feat_tiles=f_pad // F_BLK,

@@ -162,7 +162,11 @@ class IngestPipeline:
                 # keep non-finite garbage out of the masked multiply
                 v = np.where(mask.reshape((-1,) + (1,) * (vals.ndim - 1)),
                              vals, 0.0)
-            eng.write_rows(rows, v, mask, n_live=n_live)
+            # expand this coalesced device batch's frontier here (host side,
+            # before dispatch) so the sparse-vs-dense decision and the
+            # active-block bucket are pinned per batch, not per event
+            act = eng.frontier_active(rows, mask, n_live=n_live)
+            eng.write_rows(rows, v, mask, n_live=n_live, active=act)
         self.stats.events_dispatched += n
         self.stats.events_dropped += dropped
         self.stats.batches += 1
