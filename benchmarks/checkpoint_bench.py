@@ -1,0 +1,194 @@
+"""Durable-session benchmark -> BENCH_checkpoint.json.
+
+Measures the recovery-time claim behind ``EagrSession.save``/``restore``:
+a restore deserializes the committed plan tables, window rings and PAOs and
+re-adopts them onto fresh engines — it never re-runs overlay construction
+(``construct_vnm``) or plan compilation (``compile_plan``), so time-to-first-
+answer after a crash is bounded by checkpoint I/O, not by the build pipeline.
+
+Phases:
+
+  cold_build     graph -> EagrSession -> register -> first update + read
+                 (construction + cost model + compile + first dispatch: the
+                 price a crash without checkpoints pays)
+  save           quiesced blocking ``session.save`` (serialize + fsync view
+                 of the full session: plans, windows, PAOs, master journal)
+  restore        ``EagrSession.restore`` from the committed manifest + the
+                 same first read, answer asserted bit-identical to the
+                 pre-save session
+  restore_reshard  the same checkpoint restored onto a different shard
+                 layout (plan re-derivation, window re-slicing) — priced
+                 separately because it *does* re-run decide/compile per shard
+
+Full mode runs the paper-scale 1M-node / 10M-edge power-law graph (the
+acceptance floor: restore >= 5x faster than cold build); quick mode a
+20k/120k R-MAT (CI, conservative floor). ``--check`` gates the
+restore-vs-cold speedup against ``BENCH_baselines.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --checkpoint [--quick] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.harness import (
+    Phases,
+    Watchdog,
+    check_gates,
+    env_fingerprint,
+    export_trajectory,
+    load_baselines,
+)
+from repro.graphs.generators import powerlaw_graph, rmat_graph
+from repro.session import EagrSession, Query
+from repro.core.window import WindowSpec
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_checkpoint.json")
+
+QUICK = dict(gen="rmat", n_nodes=20_000, n_edges=120_000, shards=None,
+             reshard=2, n_updates=8, batch=1_024, budget_s=900)
+FULL = dict(gen="powerlaw", n_nodes=1_000_000, n_edges=10_000_000,
+            shards=None, reshard=4, n_updates=8, batch=8_192, budget_s=3_600)
+
+WINDOW = 8
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def _traffic(session: EagrSession, cfg: dict, seed: int = 1) -> list:
+    writers = np.array(session.writers)
+    rng = np.random.default_rng(seed)
+    return [(rng.choice(writers, size=cfg["batch"]).astype(np.int64),
+             rng.integers(0, 64, cfg["batch"]).astype(np.float32))
+            for _ in range(cfg["n_updates"])]
+
+
+def run_checkpoint_bench(quick: bool = False, check: bool = False,
+                         out_path: str = OUT_PATH) -> dict:
+    cfg = QUICK if quick else FULL
+    phases = Phases()
+    report: dict = {
+        "bench": "checkpoint",
+        "quick": quick,
+        "fingerprint": env_fingerprint(),
+        "graph": {k: cfg[k] for k in ("gen", "n_nodes", "n_edges")},
+        "window": WINDOW,
+        "shards": cfg["shards"] or 0,
+    }
+    ckpt_dir = tempfile.mkdtemp(prefix="eagr_bench_ckpt_")
+    try:
+        with Watchdog(cfg["budget_s"], label="checkpoint_bench"):
+            if cfg["gen"] == "rmat":
+                g = rmat_graph(cfg["n_nodes"], cfg["n_edges"], seed=0)
+            else:
+                g = powerlaw_graph(cfg["n_nodes"], cfg["n_edges"],
+                                   sharing=0.5, seed=0)
+
+            # ---- cold build: everything a crash without checkpoints re-pays
+            with phases.phase("cold_build"):
+                t0 = time.perf_counter()
+                session = EagrSession(g, shards=cfg["shards"])
+                totals = session.register(
+                    Query(agg="sum", window=WindowSpec("tuple", WINDOW)))
+                for ids, vals in _traffic(session, cfg):
+                    session.update(ids, vals)
+                probe = np.array(session.readers[:64], np.int64)
+                want = np.asarray(session.read(totals, probe))
+                cold_s = time.perf_counter() - t0
+            report["cold_build_s"] = round(cold_s, 3)
+            print(f"checkpoint/cold_build: {cold_s:.2f}s "
+                  f"({cfg['n_nodes']:,} nodes, {cfg['shards'] or 0} shards)",
+                  flush=True)
+
+            # ---- save: quiesced, blocking (serialize + atomic commit)
+            with phases.phase("save"):
+                t0 = time.perf_counter()
+                step = session.save(ckpt_dir, blocking=True)
+                save_s = time.perf_counter() - t0
+            nbytes = _dir_bytes(ckpt_dir)
+            report["save_s"] = round(save_s, 3)
+            report["checkpoint_bytes"] = nbytes
+            report["save_mb_per_s"] = round(nbytes / 2**20 / save_s, 1)
+            print(f"checkpoint/save: step {step} in {save_s:.2f}s "
+                  f"({nbytes / 2**20:.1f} MiB, "
+                  f"{report['save_mb_per_s']} MiB/s)", flush=True)
+
+            # ---- restore: manifest -> live session -> first answer
+            with phases.phase("restore"):
+                t0 = time.perf_counter()
+                restored = EagrSession.restore(ckpt_dir)
+                (totals_r,) = restored.queries
+                got = np.asarray(restored.read(totals_r, probe))
+                restore_s = time.perf_counter() - t0
+            np.testing.assert_array_equal(got, want)
+            report["restore_s"] = round(restore_s, 3)
+            report["speedup_restore_vs_cold"] = round(cold_s / restore_s, 2)
+            print(f"checkpoint/restore: {restore_s:.2f}s to first "
+                  f"bit-identical answer = "
+                  f"{report['speedup_restore_vs_cold']}x cold build",
+                  flush=True)
+
+            # ---- restore onto a different layout (re-derives plans)
+            with phases.phase("restore_reshard"):
+                t0 = time.perf_counter()
+                resharded = EagrSession.restore(ckpt_dir,
+                                                shards=cfg["reshard"])
+                (totals_m,) = resharded.queries
+                got_m = np.asarray(resharded.read(totals_m, probe))
+                reshard_s = time.perf_counter() - t0
+            np.testing.assert_allclose(got_m, want, rtol=1e-5)
+            report["restore_reshard_s"] = round(reshard_s, 3)
+            report["reshard_to"] = cfg["reshard"]
+            print(f"checkpoint/restore_reshard: -> {cfg['reshard']} shards "
+                  f"in {reshard_s:.2f}s", flush=True)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    report["phase_seconds"] = phases.seconds
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+
+    export_trajectory("checkpoint", {
+        "quick": quick,
+        "cold_build_s": report["cold_build_s"],
+        "save_s": report["save_s"],
+        "restore_s": report["restore_s"],
+        "speedup_restore_vs_cold": report["speedup_restore_vs_cold"],
+    })
+
+    if check:
+        all_b = load_baselines()
+        view = {"tolerance": all_b.get("tolerance", 0.30),
+                "checkpoint": all_b.get("checkpoint", {}).get(
+                    "quick" if quick else "full", {})}
+        check_gates(report, [
+            # acceptance: restore of the 1M/10M session >= 5x faster than
+            # the cold build->construct->compile path; quick floor is
+            # conservative (small graph, construction is cheap there).
+            {"path": "speedup_restore_vs_cold",
+             "floor": 2.0 if quick else 5.0,
+             "baseline": "speedup_restore_vs_cold"},
+        ], baselines=view, section="checkpoint", label="checkpoint")
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+
+    run_checkpoint_bench(quick="--quick" in sys.argv,
+                         check="--check" in sys.argv)

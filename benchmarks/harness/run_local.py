@@ -76,22 +76,12 @@ def percentiles(samples_s: list[float],
 
 
 def frontier_summary(counts: list[int]) -> dict:
-    """Frontier-size distribution from an engine's ``frontier_log``: each
-    write step contributed its active-block capacity K (sparse) or ``-1``
-    (dense fallback). Reports how sparse the write path actually ran plus
-    p50/p99 of the active-block count over the sparse steps."""
-    sparse = sorted(k for k in counts if k >= 0)
-    out = {
-        "steps": len(counts),
-        "dense_steps": sum(1 for k in counts if k < 0),
-        "sparse_steps": len(sparse),
-    }
-    if sparse:
-        out["p50_blocks"] = sparse[min(len(sparse) - 1,
-                                       round(0.50 * (len(sparse) - 1)))]
-        out["p99_blocks"] = sparse[min(len(sparse) - 1,
-                                       round(0.99 * (len(sparse) - 1)))]
-    return out
+    """Frontier-size distribution from an engine's ``frontier_log`` —
+    re-exported from :mod:`repro.core.frontier` (the summary moved next to
+    the index so ``EagrSession.stats()`` shares it)."""
+    from repro.core.frontier import frontier_summary as impl
+
+    return impl(counts)
 
 
 def sustained(step, *, duration_s: float, barrier=None) -> dict:

@@ -35,9 +35,14 @@ def main(argv=None) -> None:
                         "vectorized vs pipelined write path, reads under "
                         "write, per-backend rows) and emit "
                         "BENCH_streaming.json")
+    p.add_argument("--checkpoint", action="store_true",
+                   help="run the durable-session benchmark (cold build vs "
+                        "save/restore time-to-first-answer, restore with "
+                        "resharding) and emit BENCH_checkpoint.json")
     p.add_argument("--check", action="store_true",
-                   help="with --dynamic/--sharded/--streaming: exit nonzero "
-                        "if the measured path regresses below its floor")
+                   help="with --dynamic/--sharded/--streaming/--checkpoint: "
+                        "exit nonzero if the measured path regresses below "
+                        "its floor")
     args = p.parse_args(argv)
 
     if args.engine:
@@ -59,6 +64,10 @@ def main(argv=None) -> None:
     if args.streaming:
         from benchmarks.streaming_bench import run_streaming_bench
         run_streaming_bench(quick=args.quick, check=args.check)
+        return
+    if args.checkpoint:
+        from benchmarks.checkpoint_bench import run_checkpoint_bench
+        run_checkpoint_bench(quick=args.quick, check=args.check)
         return
 
     import benchmarks.paper_figures as F

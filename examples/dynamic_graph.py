@@ -72,9 +72,9 @@ for step in range(STEPS):
             joined = [u for u in session.readers if u >= N_USERS]
             if joined:
                 session.delete_node(int(rng.choice(joined)))
-    (res,) = session.flush()
+    report = session.flush()   # typed FlushReport (still the result list)
     n_patches += 1
-    n_recompiles += bool(res and res.recompiled)
+    n_recompiles += report.recompiled
 
     # trend queries against the live (possibly just-patched) plan
     q = rng.choice(session.readers, 64)

@@ -64,7 +64,7 @@ for step in range(N_BATCHES):
         session.read(totals, sample)
 session.flush()  # final pipeline barrier
 dt = time.perf_counter() - t0
-stats = session.ingest_stats
+stats = session.stats().ingest  # SessionStats: one consolidated counter view
 print(f"streamed {stats.events_in:,} events in {dt:.2f}s "
       f"({stats.events_in / dt:,.0f} ev/s): {stats.batches} device batches, "
       f"{stats.flushes} flushes, {stats.stall_s * 1e3:.0f}ms backpressure")

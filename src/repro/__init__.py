@@ -12,6 +12,27 @@ Public surface:
   * The low-level tier stays public for substrate users: ``EagrEngine``,
     ``DynamicOverlay``, ``partition_overlay`` / ``StackedShardedEngine`` /
     ``ShardedDynamic``, ``build_bipartite``, ``construct_vnm``.
+  * Durable sessions: ``EagrSession.save`` / ``EagrSession.restore`` /
+    ``EagrSession.stats`` with :class:`SessionStats`, :class:`FlushReport`,
+    :class:`AdaptReport`, the :class:`CheckpointManager` substrate and the
+    :class:`SessionRecoveryDriver` crash-recovery loop.
+
+The session lifecycle end to end::
+
+    import numpy as np
+    from repro import EagrSession, Query, WindowSpec
+
+    session = EagrSession(graph, ckpt_dir="/data/ckpt", ckpt_every=64)
+    clicks = session.register(Query(agg="sum",
+                                    window=WindowSpec("tuple", 8)))
+    session.update(np.array([2, 5, 2]), np.array([1.0, 0.5, 2.0]))
+    step = session.save()                 # async, atomic; also every 64th
+                                          # update lands one automatically
+    ...                                   # process dies / redeploys ...
+    session = EagrSession.restore("/data/ckpt")       # bit-identical state
+    (clicks,) = session.queries
+    session.read(clicks, np.array([7]))   # answers exactly as before save
+    session.stats()                       # SessionStats counter snapshot
 
 Exports resolve lazily (PEP 562) so ``import repro`` stays cheap and config
 subpackages avoid pulling the whole engine stack.
@@ -24,6 +45,11 @@ _EXPORTS = {
     "EagrSession": "repro.session",
     "Query": "repro.session",
     "QueryHandle": "repro.session",
+    "SessionStats": "repro.session",
+    "FlushReport": "repro.session",
+    "AdaptReport": "repro.session",
+    "CheckpointManager": "repro.distributed.checkpoint",
+    "SessionRecoveryDriver": "repro.distributed.fault",
     "WindowSpec": "repro.core.window",
     "Aggregate": "repro.core.aggregates",
     "make_aggregate": "repro.core.aggregates",

@@ -348,6 +348,13 @@ class DynamicOverlay:
         edges += [(wn, -1) for wn in self.neg_edges.get(nid, [])]
         return tuple(edges)
 
+    @property
+    def pending_nodes(self) -> int:
+        """Journal size: overlay nodes the next :meth:`drain_delta` will
+        snapshot (dirtied existing nodes plus nodes born this burst)."""
+        return len(set(self._dirty)
+                   | set(range(self._delta_base, len(self.b.kinds))))
+
     def drain_delta(self) -> OverlayDelta:
         """Return the structured mutation log since the last drain (or since
         construction) and reset it. Feed the result to

@@ -842,6 +842,93 @@ def place_plan_arrays(stacked: PlanArrays, s: int,
     return jax.tree.map(lambda st, x: st.at[s].set(x), stacked, arrays)
 
 
+# ------------------------------------------------------------ serialization
+def _plan_array_leaves(arrays: PlanArrays):
+    """Deterministic (name, leaf) walk of a ``PlanArrays`` pytree with dotted
+    names (``push.seg`` ...) — the checkpoint codec's stable key space."""
+    for name, val in arrays._asdict().items():
+        if isinstance(val, LevelTables):
+            for f, sub in val._asdict().items():
+                yield f"{name}.{f}", sub
+        else:
+            yield name, val
+
+
+def _map_to_pairs(m: dict[int, int]) -> np.ndarray:
+    """A host id map as one (2, len) int64 array (keys row, values row)."""
+    out = np.empty((2, len(m)), np.int64)
+    if m:
+        out[0] = np.fromiter(m.keys(), np.int64, len(m))
+        out[1] = np.fromiter(m.values(), np.int64, len(m))
+    return out
+
+
+def plan_snapshot(plan: ExecPlan) -> tuple[dict, dict]:
+    """Serialize a live ``ExecPlan`` to ``(arrays, objs)``: a flat dict of
+    host numpy arrays plus a JSON-safe object dict. Everything a bit-identical
+    restore needs travels verbatim — device tables, host decision/level (from
+    the patch bookkeeping when present, so in-capacity churn since compile is
+    reflected), id maps — while derived caches (routes LUT, ``PlanHost``,
+    frontier indexes) are rebuilt on the other side."""
+    arrays = {f"pa.{name}": np.asarray(jax.device_get(leaf))
+              for name, leaf in _plan_array_leaves(plan.arrays)}
+    host = plan.host
+    if host is not None:
+        decision = np.asarray(host.decision[: host.n_real], np.int64)
+        level = np.asarray(host.level[: host.n_real], np.int64)
+    else:
+        decision = np.asarray(plan.decision, np.int64)
+        level = np.asarray(plan.level, np.int64)
+    arrays.update({
+        "decision": decision,
+        "level": level,
+        "writer_node": np.asarray(plan.writer_node, np.int64),
+        "wrob": _map_to_pairs(plan.writer_row_of_base),
+        "rnob": _map_to_pairs(plan.reader_node_of_base),
+    })
+    objs = {
+        "meta": dataclasses.asdict(plan.meta),
+        "depth": int(plan.depth),
+        "n_push_edges": int(plan.n_push_edges),
+        "n_pull_edges": int(plan.n_pull_edges),
+        "patches_applied": int(plan.patches_applied),
+    }
+    return arrays, objs
+
+
+def plan_from_snapshot(arrays: dict, objs: dict) -> ExecPlan:
+    """Rebuild an ``ExecPlan`` from :func:`plan_snapshot` output without
+    compiling anything. ``interpret`` is recomputed for the restoring host
+    (a TPU save restores on CPU and vice versa); lazy derived state
+    (``PlanHost``, frontier indexes) stays unmaterialized until first use."""
+    meta = PlanMeta(**objs["meta"])
+    if meta.backend == "pallas":
+        meta = dataclasses.replace(
+            meta, interpret=jax.default_backend() != "tpu")
+    def put(name):
+        return jax.device_put(arrays[f"pa.{name}"])
+
+    pa = PlanArrays(
+        decision=put("decision"), writer_node=put("writer_node"),
+        push=LevelTables(**{f: put(f"push.{f}")
+                            for f in LevelTables._fields}),
+        pull=LevelTables(**{f: put(f"pull.{f}")
+                            for f in LevelTables._fields}),
+        demand_dst=put("demand_dst"), demand_src=put("demand_src"))
+    wrob = {int(k): int(v) for k, v in zip(*arrays["wrob"])}
+    rnob = {int(k): int(v) for k, v in zip(*arrays["rnob"])}
+    return ExecPlan(
+        meta=meta, arrays=pa, depth=int(objs["depth"]),
+        decision=np.asarray(arrays["decision"], np.int64),
+        level=np.asarray(arrays["level"], np.int64),
+        writer_node=np.asarray(arrays["writer_node"], np.int64),
+        writer_row_of_base=wrob, reader_node_of_base=rnob,
+        routes=BaseRoutes.from_maps(wrob, rnob),
+        n_push_edges=int(objs["n_push_edges"]),
+        n_pull_edges=int(objs["n_pull_edges"]),
+        patches_applied=int(objs["patches_applied"]))
+
+
 # ----------------------------------------------------------------------- API
 class EagrEngine:
     """Runtime for one compiled ego-centric aggregate query."""
@@ -896,6 +983,17 @@ class EagrEngine:
         windows = init_windows(self.plan.meta.n_writers, self.spec)
         pao = self.agg.init_pao(self.plan.meta.n_nodes)
         return EngineState(windows, pao, jnp.float32(0.0))
+
+    def adopt_state(self, state: EngineState, *, now_host: float,
+                    last_eval_now: float, expiry=()) -> None:
+        """Adopt a restored ``EngineState`` plus the host-side clock mirror
+        and extremal expiry bookkeeping (checkpoint restore seam). The state
+        is taken verbatim — no PAO refresh, so restored answers stay
+        bit-identical to the saved session's."""
+        self.state = state
+        self._now_host = float(now_host)
+        self._last_eval_now = float(last_eval_now)
+        self._expiry = sorted(float(t) for t in expiry)
 
     # ------------------------------------------------------------- execution
     def write_batch(self, base_ids: np.ndarray, values: np.ndarray,

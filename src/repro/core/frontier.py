@@ -80,6 +80,7 @@ __all__ = [
     "FrontierIndex",
     "ReaderFrontierIndex",
     "bucket_active",
+    "frontier_summary",
     "sparse_mode",
     "sparse_density",
     "sparse_rowfrac",
@@ -108,6 +109,26 @@ def sparse_rowfrac() -> float:
         return float(os.environ.get("EAGR_SPARSE_ROWFRAC", "0.05"))
     except ValueError:
         return 0.05
+
+
+def frontier_summary(counts: list[int]) -> dict:
+    """Frontier-size distribution from an engine's ``frontier_log``: each
+    write step contributed its active-block capacity K (sparse) or ``-1``
+    (dense fallback). Reports how sparse the write path actually ran plus
+    p50/p99 of the active-block count over the sparse steps. Shared by the
+    bench harness and ``EagrSession.stats()``."""
+    sparse = sorted(k for k in counts if k >= 0)
+    out = {
+        "steps": len(counts),
+        "dense_steps": sum(1 for k in counts if k < 0),
+        "sparse_steps": len(sparse),
+    }
+    if sparse:
+        out["p50_blocks"] = sparse[min(len(sparse) - 1,
+                                       round(0.50 * (len(sparse) - 1)))]
+        out["p99_blocks"] = sparse[min(len(sparse) - 1,
+                                       round(0.99 * (len(sparse) - 1)))]
+    return out
 
 
 def bucket_active(n: int) -> int:

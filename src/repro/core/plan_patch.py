@@ -496,6 +496,18 @@ class PatchResult:
                                              # patches) — reusable by stacked
                                              # deployments for slice patching
 
+    @property
+    def kind(self) -> str:
+        """How this delta landed: ``'recompiled'`` (capacity overflow fell
+        back to compile_plan), ``'relayout'`` (in-capacity but at least one
+        level was rebuilt wholesale), or ``'patched'`` (slot/point edits
+        only) — the categories ``FlushReport`` counts per flush."""
+        if self.recompiled:
+            return "recompiled"
+        if self.stats.get("levels_rebuilt"):
+            return "relayout"
+        return "patched"
+
 
 # ------------------------------------------------------------ graph updating
 def _relax_levels(host: PlanHost, seeds: set[int]) -> set[int]:

@@ -236,6 +236,40 @@ def reset_window_rows(state: WindowState, rows) -> WindowState:
 # with a leading shard axis: values (S, n_writers, cap[, value_dim]), etc.
 # The per-shard helpers above all operate on axis 0 = writer rows, so a
 # stacked state is just the same NamedTuple vmapped/shard_mapped over axis 0.
+def window_state_to_host(state: WindowState) -> dict:
+    """One writer window ring as a ``{field: numpy}`` dict (checkpoint
+    codec). Values travel verbatim — restore is bit-identical, including
+    ring head positions and partial occupancy."""
+    return {f: np.asarray(jax.device_get(x))
+            for f, x in zip(WindowState._fields, state)}
+
+
+def window_state_from_host(arrs: dict) -> WindowState:
+    return WindowState(*(jax.device_put(np.ascontiguousarray(arrs[f]))
+                         for f in WindowState._fields))
+
+
+def take_window_rows(arrs: dict, rows) -> dict:
+    """Host-side row gather of a window snapshot: output row i is input row
+    ``rows[i]`` (or an all-zero ring for ``rows[i] < 0`` — a padding/fresh
+    writer row). This is the reshard redistribution primitive: write
+    replication keeps a writer's ring identical across every shard that owns
+    it, so any N-shard layout reassembles into any M-shard layout by base
+    id."""
+    idx = np.asarray(rows, np.int64).reshape(-1)
+    live = idx >= 0
+    out = {}
+    for f in WindowState._fields:
+        src = np.asarray(arrs[f])
+        # fresh rows match init_windows: empty slots carry stamp -inf, so a
+        # gathered dead row is indistinguishable from a never-written one
+        fill = -np.inf if f == "stamps" else 0
+        dst = np.full((len(idx),) + src.shape[1:], fill, src.dtype)
+        dst[live] = src[idx[live]]
+        out[f] = dst
+    return out
+
+
 def stack_windows(states: list[WindowState]) -> WindowState:
     """Stack aligned per-shard window states along a new leading shard axis."""
     shapes = {tuple(x.shape for x in s) for s in states}

@@ -112,3 +112,67 @@ class FaultTolerantRunner:
                 step = restored      # deterministic data replay from here
         self.ckpt.wait()
         return state, report
+
+
+class SessionRecoveryDriver:
+    """Crash-recovery loop over a durable :class:`repro.session.EagrSession`.
+
+    The session's update-batch sequence number (``session._seq``, the step a
+    checkpoint commits under) is the authoritative stream position:
+    ``make_batch(seq)`` must be deterministic in ``seq``, and after a crash
+    the driver restores the latest committed checkpoint and replays from its
+    recorded sequence number — the restored engine state plus the replayed
+    suffix reproduces exactly the uninterrupted run (the replay-determinism
+    test pins this bit-for-bit).
+
+    ``make_session()`` builds the cold session (used on first start, and
+    when a crash precedes the first committed checkpoint).
+    """
+
+    def __init__(self, make_session: Callable[[], Any],
+                 make_batch: Callable[[int], Any], directory: str, *,
+                 ckpt_every: int = 16, max_restarts: int = 3):
+        self.make_session = make_session
+        self.make_batch = make_batch
+        self.directory = directory
+        self.ckpt_every = max(1, int(ckpt_every))
+        self.max_restarts = max_restarts
+        self.report = RunReport()
+
+    def _boot(self):
+        mgr = CheckpointManager(self.directory)
+        if mgr.latest_step() is None:
+            return self.make_session()
+        from repro.session import EagrSession
+        return EagrSession.restore(self.directory)
+
+    def run(self, n_batches: int, *,
+            fail_at: "set[int] | None" = None) -> Any:
+        """Feed batches 0..n_batches-1 through the session with periodic
+        checkpoints; on a failure (injected via ``fail_at`` step indices, or
+        any exception out of the update path) restore and replay. Returns
+        the live session positioned at ``_seq == n_batches``."""
+        session = self._boot()
+        restarts = 0
+        while session._seq < n_batches:
+            try:
+                seq = session._seq
+                if fail_at and seq in fail_at:
+                    fail_at.discard(seq)
+                    raise RuntimeError(
+                        f"injected node failure at batch {seq}")
+                ids, values = self.make_batch(seq)
+                session.update(ids, values)
+                self.report.steps_run += 1
+                if session._seq % self.ckpt_every == 0:
+                    session.save(self.directory, blocking=False)
+                    self.report.checkpoints += 1
+            except Exception:
+                restarts += 1
+                self.report.restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                session.wait_for_checkpoint()
+                session = self._boot()  # replay resumes at the saved _seq
+        session.wait_for_checkpoint()
+        return session

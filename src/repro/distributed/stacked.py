@@ -287,6 +287,22 @@ class StackedShardedEngine:
         return EngineState(windows, pao, jnp.zeros((self.n_shards,),
                                                    jnp.float32))
 
+    def adopt_state(self, state: EngineState, *, now_host: float,
+                    last_eval_now) -> None:
+        """Adopt a restored stacked ``EngineState`` plus the host clock
+        mirror and the per-shard last-PAO-eval instants (checkpoint restore
+        seam). The state is committed to the canonical shard sharding and
+        taken verbatim — no PAO refresh, so restored reads stay bit-identical
+        to the saved session's."""
+        self.state = self._commit(state)
+        self._now_host = float(now_host)
+        self._last_eval_now = np.asarray(last_eval_now,
+                                         np.float32).reshape(-1).copy()
+        if len(self._last_eval_now) != self.n_shards:
+            raise ValueError(
+                f"last_eval_now has {len(self._last_eval_now)} shards, "
+                f"engine has {self.n_shards}")
+
     def refresh_owner_maps(self) -> None:
         """Rebuild the device-resident base-id routing maps from the host
         plans (after construction and after structural churn). Capacity grows

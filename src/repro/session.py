@@ -60,7 +60,8 @@ from repro.core.engine import EagrEngine, bucket_batch
 from repro.core.vnm import construct_vnm
 from repro.core.window import WindowSpec
 
-__all__ = ["Query", "QueryHandle", "EagrSession", "bucket_batch"]
+__all__ = ["Query", "QueryHandle", "EagrSession", "bucket_batch",
+           "SessionStats", "FlushReport", "AdaptReport"]
 
 
 # ------------------------------------------------------------------- queries
@@ -152,6 +153,75 @@ class QueryHandle:
         return self.session.read(self, ids)
 
 
+# -------------------------------------------------------------- typed reports
+class FlushReport(list):
+    """Typed result of :meth:`EagrSession.flush`.
+
+    Still the list of per-group patch results it always was (``PatchResult``
+    / nested per-shard lists / ``None`` for groups with an empty journal), so
+    existing unpacking — ``(res,) = session.flush()``, iteration — keeps
+    working; plus counters over every result in the batch:
+
+    * ``patched`` — plans updated in place through the §3.3 device patch path
+    * ``relayout`` — patches that rebuilt level tables within capacity
+    * ``recompiled`` — genuine capacity overflows (full re-trace)
+    * ``journal_nodes`` — overlay nodes the drained journals carried
+    """
+
+    def __init__(self, results, *, patched: int = 0, recompiled: int = 0,
+                 relayout: int = 0, journal_nodes: int = 0):
+        super().__init__(results)
+        self.patched = patched
+        self.recompiled = recompiled
+        self.relayout = relayout
+        self.journal_nodes = journal_nodes
+
+    def __repr__(self) -> str:
+        return (f"FlushReport(groups={len(self)}, patched={self.patched}, "
+                f"relayout={self.relayout}, recompiled={self.recompiled}, "
+                f"journal_nodes={self.journal_nodes})")
+
+
+class AdaptReport(int):
+    """Typed result of :meth:`EagrSession.adapt`: still the total §4.8
+    decision-flip count as an ``int`` (all existing arithmetic holds), plus
+    the per-group breakdown."""
+
+    per_group: tuple
+
+    def __new__(cls, per_group=()):
+        self = super().__new__(cls, sum(per_group))
+        self.per_group = tuple(int(f) for f in per_group)
+        return self
+
+    @property
+    def flips(self) -> int:
+        return int(self)
+
+    def __repr__(self) -> str:
+        return f"AdaptReport(flips={int(self)}, per_group={self.per_group})"
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """One consolidated counter surface for a session (:meth:`EagrSession.
+    stats`): ingest, construction, frontier and patch counters that
+    previously lived on three separate ad-hoc attributes."""
+
+    n_queries: int
+    n_engine_groups: int
+    n_shards: int
+    updates: int                    # update() batches applied (= checkpoint
+                                    # sequence number: replay resumes here)
+    pending_mutations: bool
+    journal_nodes: int              # overlay nodes awaiting the next flush
+    patches_applied: int            # in-place device patches, all plans
+    frontier: dict                  # frontier-size distribution (write path)
+    ingest: "object | None"         # streams.ingest.IngestStats
+    construction: "object | None"   # core.vnm.ConstructionStats
+    last_checkpoint_step: "int | None"
+
+
 # ------------------------------------------------------------- engine groups
 class _EngineGroup:
     """One (aggregate, window, continuous) equivalence class of queries: a
@@ -186,6 +256,9 @@ class _EngineGroup:
             from repro.distributed.stacked import StackedShardedEngine
 
             self.dyn = None
+            # creation-time global decisions over the basis id space — the
+            # repartition key a checkpoint needs to reshard N -> M
+            self.dec_global = decisions
             self.sharded = partition_overlay(
                 basis, decisions, n_shards=session.n_shards,
                 seed=session.seed, backend=session.backend,
@@ -206,9 +279,40 @@ class _EngineGroup:
     def _journal(self):
         return self.sdyn if self.sdyn is not None else self.dyn
 
+    def ensure_journal(self) -> None:
+        """Materialize the churn journal of a restored group. Restored groups
+        come up journal-less (rebuilding every group's DynamicOverlay at
+        restore would cost more than the restore itself); the session calls
+        this before the first post-restore mutation, so the journal forks the
+        master in its pre-mutation state."""
+        if self.dyn is not None or self.sdyn is not None:
+            return
+        if self.session.n_shards:
+            from repro.distributed.checkpoint import scrub_dead_writers
+            from repro.distributed.eagr_shard import ShardedDynamic
+
+            self.sdyn = ShardedDynamic(self.sharded, self.engine,
+                                       growth=self.session.growth)
+            # the saved per-shard overlays are unpruned exports — deleted
+            # writer nodes linger with their 'W' label and must not be
+            # re-registered as live by the rebuilt journal
+            for s, dyn in enumerate(self.sdyn.dynamics):
+                scrub_dead_writers(
+                    dyn, set(self.sharded.shard_plans[s].writer_row_of_base))
+        else:
+            self.dyn = self.session._master.fork()
+
+    def journal_nodes(self) -> int:
+        """Overlay nodes the next flush() will drain across this group."""
+        if self.sdyn is not None:
+            return sum(d.pending_nodes for d in self.sdyn.dynamics)
+        return self.dyn.pending_nodes if self.dyn is not None else 0
+
     def flush(self, growth: float):
         if self.sdyn is not None:
             return self.sdyn.apply()
+        if self.dyn is None:
+            return None  # restored group, no churn since restore
         delta = self.dyn.drain_delta()
         if delta.empty:
             return None
@@ -291,7 +395,10 @@ class EagrSession:
                  neighborhood=None, write_freq=None, read_freq=None,
                  calibrate: bool = False, adapt_every: int = 0,
                  ingest_depth: int | None = None,
-                 ingest_batch: int | None = None):
+                 ingest_batch: int | None = None,
+                 ckpt_dir: str | None = None,
+                 ckpt_every: int | None = None,
+                 ckpt_keep: int | None = None):
         bp = graph if isinstance(graph, Bipartite) else build_bipartite(
             graph, hops=hops, pred=pred, neighborhood=neighborhood)
         self.bipartite = bp
@@ -303,6 +410,8 @@ class EagrSession:
         self.headroom = headroom
         self.growth = growth
         self.seed = seed
+        self.threshold = int(threshold)
+        self.split_limit = int(split_limit)
         self.calibrate = calibrate
         self.adapt_every = int(adapt_every)
         self.write_freq = None if write_freq is None \
@@ -311,9 +420,11 @@ class EagrSession:
             else np.asarray(read_freq, np.float64)
         overlay, self.overlay_stats = construct_vnm(
             bp, variant=variant, max_iterations=max_iterations, seed=seed)
-        self._master = DynamicOverlay.from_overlay(
+        self._master_obj = DynamicOverlay.from_overlay(
             overlay, bp.reader_input_sets(),
-            threshold=threshold, split_limit=split_limit)
+            threshold=self.threshold, split_limit=self.split_limit)
+        self._master_src = None  # restored sessions carry the payload instead
+        self._master_dup = bool(overlay.dup_insensitive)
         self._groups: dict[tuple, _EngineGroup] = {}
         self._handles: dict[int, QueryHandle] = {}
         self._next_qid = 0
@@ -333,6 +444,35 @@ class EagrSession:
         self.ingest_depth = max(0, int(ingest_depth))
         self.ingest_batch = int(ingest_batch) or 8192
         self._pipeline = None
+        self._carry_ingest = None  # IngestStats carried across restores
+        # durable sessions (PR 9): the update-batch sequence number doubles
+        # as the checkpoint step — replay resumes the event stream from it
+        self._seq = 0
+        if ckpt_dir is None:
+            ckpt_dir = os.environ.get("EAGR_CKPT_DIR") or None
+        if ckpt_every is None:
+            ckpt_every = int(os.environ.get("EAGR_CKPT_EVERY", "0") or 0)
+        if ckpt_keep is None:
+            ckpt_keep = int(os.environ.get("EAGR_CKPT_KEEP", "3") or 3)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = max(0, int(ckpt_every))
+        self.ckpt_keep = max(1, int(ckpt_keep))
+        self._ckpt_mgrs: dict = {}
+        self._last_ckpt_step: int | None = None
+
+    @property
+    def _master(self) -> DynamicOverlay:
+        """The session-wide master overlay journal. Restored sessions carry
+        the checkpoint payload instead and materialize the DynamicOverlay
+        only when something needs it (a mutation, a late register, a
+        neighborhood query) — a same-shape restore followed by pure
+        update/read traffic never pays the O(nodes) Python rebuild."""
+        if self._master_obj is None:
+            from repro.distributed.checkpoint import master_from_arrays
+            self._master_obj = master_from_arrays(
+                self._master_src, threshold=self.threshold,
+                split_limit=self.split_limit, dup=self._master_dup)
+        return self._master_obj
 
     # ------------------------------------------------------------- lifecycle
     def register(self, query: Query) -> QueryHandle:
@@ -430,6 +570,10 @@ class EagrSession:
             self._grow_counts(int(ids.max()))
             np.add.at(self._wcount, ids, 1.0)
         self._tick()
+        self._seq += 1
+        if self.ckpt_dir and self.ckpt_every \
+                and self._seq % self.ckpt_every == 0:
+            self.save(blocking=False)
 
     def read(self, handle: QueryHandle, ids) -> np.ndarray:
         """Answer one batch of ego-centric reads for a registered query.
@@ -471,12 +615,14 @@ class EagrSession:
         writer u for 1-hop queries; pass ``affected={reader: {writers}}`` for
         custom neighborhoods). Journaled; lands on the plans at flush()."""
         self._touch(u, v)
+        self._ensure_journals()
         self._master.add_edge(u, v, affected=affected)
         for group in self._groups.values():
             group._journal.add_edge(u, v, affected=affected)
 
     def delete_edge(self, u: int, v: int, *, affected=None) -> None:
         self._touch(u, v)
+        self._ensure_journals()
         self._master.delete_edge(u, v, affected=affected)
         for group in self._groups.values():
             group._journal.delete_edge(u, v, affected=affected)
@@ -487,48 +633,169 @@ class EagrSession:
         over ``in_neighbors``."""
         ins, outs = set(map(int, in_neighbors)), set(map(int, out_readers))
         self._touch(u, *ins, *outs)
+        self._ensure_journals()
         self._master.add_node(u, ins, outs)
         for group in self._groups.values():
             group._journal.add_node(u, ins, outs)
 
     def delete_node(self, u: int) -> None:
         self._touch(u)
+        self._ensure_journals()
         self._master.delete_node(u)
         for group in self._groups.values():
             group._journal.delete_node(u)
 
-    def flush(self) -> list:
+    def flush(self) -> FlushReport:
         """Drain every group's mutation journal into its live plan through
         the §3.3 patch path (device-resident ``PatchProgram``; recompile only
         on genuine capacity overflow). Called automatically by the next
         ``update``/``read`` after a mutation; explicit calls let callers
-        batch churn bursts. Returns per-group patch results."""
+        batch churn bursts. Returns a :class:`FlushReport` — still the list
+        of per-group patch results, plus patched/relayout/recompiled
+        counters."""
         if self._pipeline is not None:
             # pipeline barrier BEFORE patches land: writes submitted so far
             # hit the plans they were routed against, and donated/aliased
             # buffers are quiescent when the patch path swaps arrays
             self._pipeline.flush()
-        self._master.drain_delta()  # master only snapshots for late register
+        if self._master_obj is not None:
+            # master only snapshots for late register; a restored session
+            # with an unmaterialized master has nothing to drain
+            self._master_obj.drain_delta()
+        journal = sum(g.journal_nodes() for g in self._groups.values())
         results = [group.flush(self.growth)
                    for group in self._groups.values()]
         self._pending = False
-        return results
+        counts = {"patched": 0, "recompiled": 0, "relayout": 0}
 
-    def adapt(self) -> int:
+        def count(res):
+            if isinstance(res, (list, tuple)):
+                for r in res:
+                    count(r)
+            elif res is not None:
+                kind = getattr(res, "kind", None)
+                if kind in counts:
+                    counts[kind] += 1
+
+        count(results)
+        return FlushReport(results, journal_nodes=journal, **counts)
+
+    def adapt(self) -> AdaptReport:
         """Re-run the §4.8 frontier adaptation on every group against
         observed frequencies now (also triggered every ``adapt_every``
-        operations). Returns the total number of decision flips."""
+        operations). Returns an :class:`AdaptReport` — still the total
+        decision-flip count as an int, plus the per-group breakdown."""
         if self._pipeline is not None:
             self._pipeline.flush()  # plans may swap underneath the ring
         if self._pending:
             self.flush()
-        return sum(group.adapt() for group in self._groups.values())
+        return AdaptReport([group.adapt()
+                            for group in self._groups.values()])
+
+    # ------------------------------------------------------------ diagnostics
+    def stats(self) -> SessionStats:
+        """One consolidated :class:`SessionStats` snapshot: ingest,
+        construction, frontier and patch counters plus the checkpoint
+        position. Supersedes reaching for ``ingest_stats`` /
+        ``overlay_stats`` / hand-rolled frontier summaries."""
+        from repro.core.frontier import frontier_summary
+
+        logs: list[int] = []
+        patches = 0
+        for g in self._groups.values():
+            logs.extend(getattr(g.engine, "frontier_log", []))
+            if self.n_shards:
+                patches += sum(p.patches_applied
+                               for p in g.sharded.shard_plans)
+            else:
+                patches += g.engine.plan.patches_applied
+        return SessionStats(
+            n_queries=len(self._handles),
+            n_engine_groups=len(self._groups),
+            n_shards=self.n_shards,
+            updates=self._seq,
+            pending_mutations=self._pending,
+            journal_nodes=sum(g.journal_nodes()
+                              for g in self._groups.values()),
+            patches_applied=patches,
+            frontier=frontier_summary(logs),
+            ingest=self.ingest_stats,
+            construction=self.overlay_stats,
+            last_checkpoint_step=self._last_ckpt_step,
+        )
 
     @property
     def ingest_stats(self):
-        """Live :class:`repro.streams.ingest.IngestStats` of the streaming
-        pipeline (``None`` until the first pipelined update)."""
-        return None if self._pipeline is None else self._pipeline.stats
+        """Deprecated alias for ``stats().ingest`` — the live
+        :class:`repro.streams.ingest.IngestStats` (``None`` until the first
+        pipelined update; survives checkpoint/restore)."""
+        if self._pipeline is not None:
+            return self._pipeline.stats
+        return self._carry_ingest
+
+    # ------------------------------------------------------------- durability
+    def save(self, directory: str | None = None, *, step: int | None = None,
+             blocking: bool = False, keep: int | None = None) -> int:
+        """Checkpoint the live session; returns the committed step number.
+
+        Quiesces first — pending structural churn lands via :meth:`flush`,
+        the ingest ring drains — then takes a synchronous ``device_get``
+        snapshot of every group's plan/window/PAO state and hands
+        serialization to the checkpoint thread (``blocking=False``), so
+        update traffic resumes immediately while files land. The commit is
+        atomic (two-phase manifest + rename): a crash mid-save leaves the
+        previous committed checkpoint restorable.
+
+        ``directory`` defaults to the session's ``ckpt_dir``; ``step``
+        defaults to the update-batch sequence number, which is what
+        :class:`repro.distributed.fault.SessionRecoveryDriver` replays from.
+        """
+        directory = directory or self.ckpt_dir
+        if directory is None:
+            raise ValueError("no checkpoint directory — pass save(dir) or "
+                             "construct with ckpt_dir=/EAGR_CKPT_DIR")
+        if self._pending:
+            self.flush()
+        elif self._pipeline is not None:
+            self._pipeline.flush()
+        from repro.distributed.checkpoint import snapshot_session
+        arrays, objs = snapshot_session(self)
+        step = self._seq if step is None else int(step)
+        self._ckpt_manager(directory, keep).save_payload(
+            step, arrays, objs, blocking=blocking)
+        self._last_ckpt_step = step
+        return step
+
+    def wait_for_checkpoint(self) -> None:
+        """Block until every in-flight background save committed."""
+        for mgr in self._ckpt_mgrs.values():
+            mgr.wait()
+
+    @classmethod
+    def restore(cls, directory: str, *, step: int | None = None,
+                graph=None, shards: int | None = None) -> "EagrSession":
+        """Rebuild a session from a checkpoint directory (latest committed
+        step unless ``step=`` pins one).
+
+        ``shards=None`` restores the saved deployment shape bit-identically
+        — compiled plans, window rings, PAOs and clocks adopt verbatim, no
+        construction or compilation. ``shards=M`` (``M >= 1``, or ``0`` for
+        a single engine) reshards: plans recompile over the saved master
+        overlay and window rings redistribute by base writer id."""
+        from repro.distributed.checkpoint import restore_session
+        return restore_session(directory, step=step, graph=graph,
+                               shards=shards)
+
+    def _ckpt_manager(self, directory: str, keep: int | None = None):
+        from repro.distributed.checkpoint import CheckpointManager
+        mgr = self._ckpt_mgrs.get(directory)
+        if mgr is None:
+            mgr = CheckpointManager(
+                directory, keep=self.ckpt_keep if keep is None else keep)
+            self._ckpt_mgrs[directory] = mgr
+        elif keep is not None:
+            mgr.keep = keep
+        return mgr
 
     # ---------------------------------------------------------------- internal
     def _check_handle(self, handle) -> None:
@@ -537,13 +804,22 @@ class EagrSession:
             raise ValueError("unknown query handle (not registered with this "
                              "session, or already unregistered)")
 
+    def _ensure_journals(self) -> None:
+        """Materialize restored groups' churn journals before a mutation
+        touches the master, so each fork snapshots pre-mutation state."""
+        for group in self._groups.values():
+            group.ensure_journal()
+
     def _ingest(self):
         if self._pipeline is None:
             from repro.streams.ingest import IngestPipeline
             self._pipeline = IngestPipeline(
                 [g.engine for g in self._groups.values()],
                 depth=self.ingest_depth, device_batch=self.ingest_batch,
-                value_dim=self._value_dim or 1)
+                value_dim=self._value_dim or 1,
+                stats=self._carry_ingest)
+            # lifetime counters survive pipeline retirement and restore
+            self._carry_ingest = self._pipeline.stats
         return self._pipeline
 
     def _retire_pipeline(self) -> None:

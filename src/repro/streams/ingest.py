@@ -93,7 +93,8 @@ class IngestPipeline:
     """
 
     def __init__(self, engines, *, depth: int = 2, device_batch: int = 8192,
-                 value_dim: int | None = None):
+                 value_dim: int | None = None,
+                 stats: "IngestStats | None" = None):
         if not engines:
             raise ValueError("IngestPipeline needs at least one engine")
         self.engines = list(engines)
@@ -109,7 +110,9 @@ class IngestPipeline:
         self._tokens: list = [None] * self.depth
         self._slot = 0
         self._fill = 0
-        self.stats = IngestStats()
+        # a restored session hands back its saved counter block so lifetime
+        # ingest stats survive checkpoint/restore (and pipeline re-creation)
+        self.stats = stats if stats is not None else IngestStats()
 
     # ------------------------------------------------------------------ intake
     def submit(self, ids, values=None) -> None:
