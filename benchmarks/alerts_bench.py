@@ -1,0 +1,475 @@
+"""Standing-alert benchmark -> BENCH_alerts.json.
+
+Measures the push-based alert subsystem (device-evaluated predicates fused
+into the write step, compact fired-set readback) against the baseline it
+replaces — poll-everything: after every batch, gather + ``device_get`` the
+finalized measures of **all** alerted readers and run the state machine on
+host (``repro.streams.alerts.PollOracle``).
+
+Both paths share the (frontier-sparse) device write step; what differs is
+the per-batch DETECTION cost layered on top, and that is what the gated
+``speedup`` measures — each timed after the device step completed, so
+neither number hides a sync on the other's work:
+
+  push  — ``AlertSet.collect()``: one scalar count readback plus, when
+          something fired, the fixed-shape compact index/value buffer.
+          O(fired), independent of the alert count.
+  poll  — ``PollOracle.poll()``: gather + ``device_get`` the finalized
+          measures of all alerted readers, then the host state machine.
+          O(alerts), every batch, fired or not.
+
+End-to-end step medians (write+detect for both paths) are reported
+alongside (``push_step_ms`` / ``poll_step_ms``); on hosts where the device
+sweep dominates they converge, which is exactly why the detection-path
+latency is the gated metric.
+
+Sections:
+
+  * ``sizes``   — detection latency push vs poll at an alert-count ladder
+                  (quick: 2k/20k; full: 10k/100k/1M).
+  * ``gate``    — the ISSUE gate point: 100k alerts (20k quick) at ~0.1%
+                  fired fraction; ``--check`` enforces the push-vs-poll
+                  detection speedup floor (1.5x quick, 5x full) plus the
+                  committed baseline band.
+  * ``fired_fraction_sweep`` — same point at ~0.01%/0.1%/1%/10% target
+                  fired fractions: the push win shrinks as the fired set
+                  approaches the alert count (compact readback degenerates
+                  toward poll).
+  * ``detect``  — p50/p99 detection latency under sustained pipelined
+                  ingest: wall-clock from a batch's dispatch into the ring
+                  to its fired set landing on host at the ring boundary.
+  * ``stacked`` — when >1 device is attached (the mesh-8 CI entry forces 8
+                  host devices): per-shard fired sets gathered with one
+                  collective, push readback vs a full-PAO poll readback.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --alerts [--quick] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.harness import (
+    Phases,
+    Watchdog,
+    check_gates,
+    env_fingerprint,
+    export_trajectory,
+    load_baselines,
+    percentiles,
+)
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.engine import EagrEngine, bucket_batch
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.streams.alerts import AlertSet, AlertSpec, PollOracle, _reader_nodes
+from repro.streams.ingest import IngestPipeline
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_alerts.json")
+
+QUICK = dict(sizes=(2_000, 20_000), gate=20_000, reps=20, warmup=12,
+             batch=256, detect_s=1.5, budget_s=900)
+FULL = dict(sizes=(10_000, 100_000, 1_000_000), gate=100_000, reps=12,
+            warmup=16, batch=512, detect_s=6.0, budget_s=3_600)
+
+WINDOW = 8
+GATE_FRAC = 0.001          # the ISSUE's 0.1% fired-fraction gate point
+SWEEP_FRACS = (0.0001, 0.001, 0.01, 0.1)
+
+
+# ------------------------------------------------------------------- fixture
+def _build(n_alerts: int):
+    """All-push sum engine whose overlay has at least ``n_alerts`` readers
+    (every result always fresh — the continuous-query configuration alerts
+    require). rmat leaves roughly half the ids without in-edges (non-readers),
+    so size with headroom and retry larger once if the draw lands short."""
+    for factor in (2.6, 4.0):
+        n = max(512, int(factor * n_alerts))
+        g = rmat_graph(n, 6 * n, seed=0)
+        bp = build_bipartite(g)
+        ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+        dec = np.full(ov.n_nodes, D.PUSH, np.int64)
+        eng = EagrEngine(ov, dec, make_aggregate("sum"),
+                         WindowSpec("tuple", WINDOW))
+        if len(np.flatnonzero(eng.plan.routes.reader_node >= 0)) >= n_alerts:
+            return eng
+    return eng  # _alert_bases raises with the observed reader count
+
+
+def _batches(eng, batch: int, *, n_batches: int = 16, seed: int = 1):
+    writer_bases = np.flatnonzero(eng.plan.routes.writer_row >= 0)
+    rng = np.random.default_rng(seed)
+    return [(rng.choice(writer_bases, size=batch).astype(np.int64),
+             rng.integers(0, 64, batch).astype(np.float32))
+            for _ in range(n_batches)]
+
+
+def _alert_bases(eng, n_alerts: int) -> np.ndarray:
+    bases = np.flatnonzero(eng.plan.routes.reader_node >= 0)
+    if len(bases) < n_alerts:
+        raise RuntimeError(f"fixture has {len(bases)} readers < "
+                           f"{n_alerts} alerts")
+    return bases[:n_alerts].astype(np.int64)
+
+
+def _measures(eng, bases: np.ndarray) -> np.ndarray:
+    import jax
+    import jax.numpy as jnp
+
+    nodes, _ = _reader_nodes(eng.plan, bases)
+    fin = np.asarray(jax.device_get(
+        eng.agg.finalize(eng.state.pao[jnp.asarray(nodes.astype(np.int32))])),
+        np.float32)
+    return fin.reshape(len(bases), -1)[:, 0]
+
+
+def _calibrate(eng, bases, batches, *, frac: float, warmup: int,
+               batch_size: int) -> AlertSpec:
+    """A delta spec targeting roughly ``frac`` of the alerts firing per
+    step. The delta predicate re-bases its reference on every fire, so the
+    firing rate stays stationary under stationary load (an absolute
+    threshold drifts in and out of reach as windows slide): set ``dthr`` at
+    the per-step |measure delta| quantile that leaves the wanted share of
+    changed readers outside it. Measured fractions are reported alongside —
+    crossing dynamics keep this approximate."""
+    prev = None
+    deltas: list[np.ndarray] = []
+    changed = []
+    for i in range(warmup):
+        ids, vals = batches[i % len(batches)]
+        eng.write_batch(ids, vals, batch_size=batch_size)
+        m = _measures(eng, bases)
+        if prev is not None:
+            d = np.abs(m - prev)
+            d = d[d > 0]
+            if len(d):
+                deltas.append(d)
+                changed.append(len(d))
+        prev = m
+    pool = np.concatenate(deltas) if deltas else np.ones(1, np.float32)
+    c_bar = max(1.0, float(np.mean(changed))) if changed else 1.0
+    ratio = float(np.clip(frac * len(bases) / c_bar, 1e-4, 0.9))
+    return AlertSpec(delta=float(np.quantile(pool, 1.0 - ratio)))
+
+
+def _attach(eng, bases: np.ndarray, spec: AlertSpec) -> AlertSet:
+    al = AlertSet()
+    al.register(0, spec, bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    return al
+
+
+def _detach(eng) -> None:
+    eng.alerts = None
+    eng._rebind()
+
+
+def _median_ms(samples: list[float]) -> float:
+    return round(sorted(samples)[len(samples) // 2] * 1e3, 3)
+
+
+def _push_poll_point(eng, bases, spec, batches, *, reps: int,
+                     batch_size: int) -> dict:
+    """Detection latency per batch, push vs poll, on identical stationary
+    load. Each detection sample is timed AFTER ``block_until_ready`` on the
+    step, so it is pure detection-path cost: push pays the compact readback
+    (O(fired)), poll pays the O(alerts) gather + transfer + host state
+    machine. End-to-end step medians ride along."""
+    import jax
+
+    out: dict = {"n_alerts": int(len(bases))}
+    al = _attach(eng, bases, spec)
+    for i in range(2):  # compile the fused step outside the clock
+        eng.write_batch(*batches[i % len(batches)], batch_size=batch_size)
+    al.collect()
+    al.pop_fired()
+    step_s, det_s, fired = [], [], 0
+    for i in range(reps):
+        ids, vals = batches[i % len(batches)]
+        t0 = time.perf_counter()
+        eng.write_batch(ids, vals, batch_size=batch_size)
+        jax.block_until_ready(eng.state.now)
+        t1 = time.perf_counter()
+        al.collect()
+        t2 = time.perf_counter()
+        step_s.append(t2 - t0)
+        det_s.append(t2 - t1)
+        fired += sum(len(b) for b in al.pop_fired())
+    out["push_detect_ms"] = _median_ms(det_s)
+    out["push_step_ms"] = _median_ms(step_s)
+    out["push_fired_frac"] = round(fired / (reps * len(bases)), 6)
+
+    oracle = PollOracle(al)
+    _detach(eng)
+    oracle.resync(eng)
+    for i in range(2):
+        eng.write_batch(*batches[i % len(batches)], batch_size=batch_size)
+        oracle.poll(eng, float(eng._now_host) - 1.0)
+    step_s, det_s, fired = [], [], 0
+    for i in range(reps):
+        ids, vals = batches[i % len(batches)]
+        t0 = time.perf_counter()
+        eng.write_batch(ids, vals, batch_size=batch_size)
+        jax.block_until_ready(eng.state.now)
+        t1 = time.perf_counter()
+        fired += len(oracle.poll(eng, float(eng._now_host) - 1.0))
+        t2 = time.perf_counter()
+        step_s.append(t2 - t0)
+        det_s.append(t2 - t1)
+    out["poll_detect_ms"] = _median_ms(det_s)
+    out["poll_step_ms"] = _median_ms(step_s)
+    out["poll_fired_frac"] = round(fired / (reps * len(bases)), 6)
+    out["speedup"] = round(out["poll_detect_ms"] /
+                           max(out["push_detect_ms"], 1e-3), 2)
+    out["speedup_step"] = round(out["poll_step_ms"] /
+                                max(out["push_step_ms"], 1e-3), 2)
+    return out
+
+
+# ------------------------------------------------------------ detect latency
+def _detect_latency(eng, bases, spec, batches, *, duration_s: float,
+                    batch_size: int) -> dict:
+    """p50/p99 wall-clock from a device batch's dispatch into the ingest
+    ring to its fired set landing on host at the ring boundary — the
+    detection latency a push consumer observes under sustained load."""
+    al = _attach(eng, bases, spec)
+    pipe = IngestPipeline([eng], depth=2, device_batch=bucket_batch(
+        max(1024, batch_size)))
+    t_disp: dict[int, float] = {}
+    lat: list[float] = []
+    seen = al.seq_done
+    t0 = time.perf_counter()
+    i = 0
+    while time.perf_counter() - t0 < duration_s:
+        prev = al.seq
+        pipe.submit(*batches[i % len(batches)])
+        tnow = time.perf_counter()
+        for k in range(prev, al.seq):
+            t_disp[k] = tnow
+        for k in range(seen, al.seq_done):
+            lat.append(tnow - t_disp.pop(k, tnow))
+        seen = al.seq_done
+        i += 1
+    elapsed = time.perf_counter() - t0
+    pipe.flush()
+    fired = sum(len(b) for b in al.pop_fired())
+    _detach(eng)
+    out = percentiles(lat) if lat else {}
+    out["events_per_s"] = round(pipe.stats.events_in / elapsed)
+    out["device_batches"] = int(al.seq)
+    out["fired"] = int(fired)
+    return out
+
+
+# ----------------------------------------------------------------- stacked
+def _stacked_section(quick: bool) -> dict | None:
+    """Per-shard fired sets under one psum'd count collective (mesh CI). The
+    poll baseline reads the whole stacked PAO back and predicates on host —
+    the transfer the compact readback avoids."""
+    import jax
+
+    if jax.device_count() < 2:
+        return None
+    from repro.distributed.eagr_shard import partition_overlay
+    from repro.distributed.stacked import StackedShardedEngine
+
+    n, e = (2_000, 12_000) if quick else (6_000, 36_000)
+    S = min(8, jax.device_count())
+    reps = 12 if quick else 20
+    batch = 256
+    g = rmat_graph(n, e, seed=7)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    dec = np.full(ov.n_nodes, D.PUSH, np.int64)
+    sharded = partition_overlay(ov, dec, n_shards=S, seed=0)
+    eng = StackedShardedEngine(sharded, make_aggregate("sum"),
+                               WindowSpec("tuple", WINDOW))
+    writer_bases = np.array(sorted(
+        {b for p in sharded.shard_plans for b in p.writer_row_of_base}),
+        np.int64)
+    reader_bases = np.array(sorted(
+        {b for p in sharded.shard_plans for b in p.reader_node_of_base}),
+        np.int64)
+    rng = np.random.default_rng(5)
+    batches = [(rng.choice(writer_bases, size=batch),
+                rng.integers(0, 64, batch).astype(np.float32))
+               for _ in range(8)]
+    for ids, vals in batches[:6]:  # fill windows before thresholding
+        eng.write_batch(ids, vals, batch_size=batch)
+
+    al = AlertSet()
+    al.register(0, AlertSpec(above=0.0), reader_bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    m0 = al._measures_host(eng, al._plans(eng))
+    # re-register with per-reader headroom so only measure excursions fire
+    eng.alerts = None
+    al = AlertSet()
+    al.register(0, AlertSpec(above=(m0 * 1.05 + 1.0)),
+                reader_bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+
+    for i in range(2):
+        eng.write_batch(*batches[i % len(batches)], batch_size=batch)
+    al.collect()
+    al.pop_fired()
+    det_s, fired = [], 0
+    for i in range(reps):
+        eng.write_batch(*batches[i % len(batches)], batch_size=batch)
+        jax.block_until_ready(eng.state.now)
+        t0 = time.perf_counter()
+        al.collect()   # psum'd global count: one scalar readback
+        det_s.append(time.perf_counter() - t0)
+        fired += sum(len(b) for b in al.pop_fired())
+    push_ms = _median_ms(det_s)
+
+    agg = eng.agg
+    eng.alerts = None
+
+    def poll_detect():
+        pao = np.asarray(jax.device_get(eng.state.pao))
+        fin = np.asarray(agg.FINALIZE(
+            pao.reshape(-1, pao.shape[-1])), np.float32)
+        return int(np.count_nonzero(fin.reshape(len(fin), -1)[:, 0] > 0))
+
+    poll_detect()
+    det_s = []
+    for i in range(reps):
+        eng.write_batch(*batches[i % len(batches)], batch_size=batch)
+        jax.block_until_ready(eng.state.now)
+        t0 = time.perf_counter()
+        poll_detect()
+        det_s.append(time.perf_counter() - t0)
+    poll_ms = _median_ms(det_s)
+    return {
+        "n_shards": S,
+        "n_alerts": int(len(reader_bases)),
+        "push_detect_ms": push_ms,
+        "poll_full_pao_ms": poll_ms,
+        "speedup": round(poll_ms / max(push_ms, 1e-3), 2),
+        "fired": int(fired),
+    }
+
+
+# --------------------------------------------------------------------- main
+def run_alerts_bench(quick: bool = False, check: bool = False,
+                     out_path: str = OUT_PATH) -> dict:
+    cfg = QUICK if quick else FULL
+    phases = Phases()
+    report: dict = {
+        "bench": "alerts",
+        "quick": quick,
+        "fingerprint": env_fingerprint(),
+        "window": WINDOW,
+        "batch": cfg["batch"],
+        "gate_frac": GATE_FRAC,
+        "sizes": {},
+    }
+    prev_sparse = os.environ.get("EAGR_SPARSE_WRITE")
+    os.environ["EAGR_SPARSE_WRITE"] = "1"
+    try:
+        with Watchdog(cfg["budget_s"], label="alerts_bench"):
+            gate_eng = None
+            gate_bases = gate_batches = None
+            for n_alerts in cfg["sizes"]:
+                with phases.phase(f"size_{n_alerts}"):
+                    eng = _build(n_alerts)
+                    batches = _batches(eng, cfg["batch"])
+                    bases = _alert_bases(eng, n_alerts)
+                    spec = _calibrate(eng, bases, batches, frac=GATE_FRAC,
+                                      warmup=cfg["warmup"],
+                                      batch_size=cfg["batch"])
+                    row = _push_poll_point(eng, bases, spec, batches,
+                                           reps=cfg["reps"],
+                                           batch_size=cfg["batch"])
+                    report["sizes"][str(n_alerts)] = row
+                    print(f"alerts/size[{n_alerts}]: detect push "
+                          f"{row['push_detect_ms']}ms poll "
+                          f"{row['poll_detect_ms']}ms = {row['speedup']}x "
+                          f"(fired_frac push {row['push_fired_frac']})",
+                          flush=True)
+                    if n_alerts == cfg["gate"]:
+                        gate_eng, gate_bases, gate_batches = \
+                            eng, bases, batches
+            report["gate"] = dict(report["sizes"][str(cfg["gate"])])
+
+            with phases.phase("fired_fraction_sweep"):
+                sweep = {}
+                for frac in SWEEP_FRACS:
+                    spec = _calibrate(gate_eng, gate_bases, gate_batches,
+                                      frac=frac, warmup=6,
+                                      batch_size=cfg["batch"])
+                    row = _push_poll_point(gate_eng, gate_bases, spec,
+                                           gate_batches, reps=cfg["reps"],
+                                           batch_size=cfg["batch"])
+                    key = "frac_" + f"{frac:g}".replace("0.", "0_")
+                    sweep[key] = row
+                    print(f"alerts/sweep[{key}]: detect push "
+                          f"{row['push_detect_ms']}ms poll "
+                          f"{row['poll_detect_ms']}ms = {row['speedup']}x "
+                          f"(fired_frac push {row['push_fired_frac']})",
+                          flush=True)
+                report["fired_fraction_sweep"] = sweep
+
+            with phases.phase("detect"):
+                spec = _calibrate(gate_eng, gate_bases, gate_batches,
+                                  frac=GATE_FRAC, warmup=6,
+                                  batch_size=cfg["batch"])
+                report["detect"] = _detect_latency(
+                    gate_eng, gate_bases, spec, gate_batches,
+                    duration_s=cfg["detect_s"], batch_size=cfg["batch"])
+                print(f"alerts/detect: {report['detect']}", flush=True)
+
+            with phases.phase("stacked"):
+                st = _stacked_section(quick)
+                if st is not None:
+                    report["stacked"] = st
+                    print(f"alerts/stacked: {st}", flush=True)
+    finally:
+        if prev_sparse is None:
+            os.environ.pop("EAGR_SPARSE_WRITE", None)
+        else:
+            os.environ["EAGR_SPARSE_WRITE"] = prev_sparse
+
+    report["phase_seconds"] = phases.seconds
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out_path)}", flush=True)
+
+    export_trajectory("alerts", {
+        "quick": quick,
+        "gate_n_alerts": report["gate"]["n_alerts"],
+        "speedup_push_vs_poll": report["gate"]["speedup"],
+        "push_detect_ms": report["gate"]["push_detect_ms"],
+        "poll_detect_ms": report["gate"]["poll_detect_ms"],
+        "p99_detect_ms": report["detect"].get("p99_ms"),
+    })
+
+    if check:
+        all_b = load_baselines()
+        view = {"tolerance": all_b.get("tolerance", 0.30),
+                "alerts": all_b.get("alerts", {}).get(
+                    "quick" if quick else "full", {})}
+        check_gates(report, [
+            # ISSUE gate: push beats poll-everything at the 100k/0.1% point
+            # (>=5x full; the quick CI floor is conservative — small fixture,
+            # cheap transfers)
+            {"path": "gate.speedup", "floor": 1.5 if quick else 5.0,
+             "baseline": "speedup_push_vs_poll"},
+            {"path": "detect.p99_ms", "direction": "lower",
+             "baseline": "p99_detect_ms"},
+        ], baselines=view, section="alerts", label="alerts")
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+
+    run_alerts_bench(quick="--quick" in sys.argv,
+                     check="--check" in sys.argv)

@@ -71,6 +71,61 @@ def _measure(eng, bp, *, n_events, write_read_ratio, batch, seed=1):
     }
 
 
+TOPK_DOMAINS = (16, 32, 64, 128)
+
+
+def _topk_lane_rows(quick: bool) -> dict:
+    """F_BLK lane utilization for topk domains <= 128 (ROADMAP carry-over):
+    the segment_agg kernel pads the PAO feature axis to F_BLK=128 lanes per
+    tile, so a topk aggregate with ``domain`` lanes drives ``domain/128`` of
+    each tile — the padded sweep costs the same regardless. Per-domain write
+    throughput on the active substrate makes the overhead visible:
+    events/s stays roughly flat across domains below F_BLK (the padded-lane
+    ceiling), so effective per-lane throughput scales with utilization."""
+    from repro.kernels.segment_agg.segment_agg import F_BLK
+
+    from repro.core.aggregates import make_aggregate
+    from repro.core.engine import EagrEngine
+    from repro.core.window import WindowSpec
+
+    rows: dict[str, dict] = {}
+    n_events = 4_000 if quick else 12_000
+    batch = 512
+    base_eng, bp, _, _ = make_system(algorithm="vnm_a", aggregate="sum",
+                                     n_nodes=2_000, n_edges=12_000)
+    for domain in TOPK_DOMAINS:
+        agg = make_aggregate("topk", k=3, domain=domain)
+        eng = EagrEngine(base_eng.overlay, base_eng.plan.decision, agg,
+                        WindowSpec("tuple", 8))
+        writer_bases = np.flatnonzero(eng.plan.routes.writer_row >= 0)
+        rng = np.random.default_rng(domain)
+        ids = rng.choice(writer_bases, size=n_events).astype(np.int64)
+        vals = rng.integers(0, domain, n_events).astype(np.float32)
+        eng.write_batch(ids[:batch], vals[:batch], batch_size=batch)
+        jax.block_until_ready(eng.state.pao)
+        t0 = time.perf_counter()
+        n = 0
+        for i in range(0, n_events - batch + 1, batch):
+            eng.write_batch(ids[i: i + batch], vals[i: i + batch],
+                            batch_size=batch)
+            n += batch
+        jax.block_until_ready(eng.state.pao)
+        dt = time.perf_counter() - t0
+        f_pad = -(-domain // F_BLK) * F_BLK
+        util = domain / f_pad
+        ev_s = round(n / dt) if dt else None
+        rows[str(domain)] = {
+            "pao_dim": domain,
+            "f_pad": f_pad,
+            "lane_utilization": round(util, 4),
+            "write_events_per_s": ev_s,
+            "events_per_s_per_lane": round(ev_s / domain) if ev_s else None,
+        }
+        print(f"engine/topk_lanes[domain={domain}]: util {util:.2f} "
+              f"{ev_s:,} ev/s", flush=True)
+    return {"F_BLK": int(F_BLK), "domains": rows}
+
+
 def run_engine_bench(quick: bool = False, out_path: str = OUT_PATH) -> dict:
     graph = dict(n_nodes=4_000, n_edges=24_000) if quick else \
         dict(n_nodes=12_000, n_edges=72_000)
@@ -107,6 +162,8 @@ def run_engine_bench(quick: bool = False, out_path: str = OUT_PATH) -> dict:
         res["pull_edges"] = eng.plan.n_pull_edges
         report["substrates"][backend] = res
         print(f"engine/{backend}: {res}", flush=True)
+
+    report["topk_lane_utilization"] = _topk_lane_rows(quick)
 
     old = report["substrates"].get("xla_unrolled", {})
     new = report["substrates"].get(

@@ -35,6 +35,11 @@ def main(argv=None) -> None:
                         "vectorized vs pipelined write path, reads under "
                         "write, per-backend rows) and emit "
                         "BENCH_streaming.json")
+    p.add_argument("--alerts", action="store_true",
+                   help="run the standing-alert benchmark (push-based "
+                        "device predicates vs the poll-everything oracle, "
+                        "fired-fraction sweep, detection latency under "
+                        "ingest) and emit BENCH_alerts.json")
     p.add_argument("--checkpoint", action="store_true",
                    help="run the durable-session benchmark (cold build vs "
                         "save/restore time-to-first-answer, restore with "
@@ -64,6 +69,10 @@ def main(argv=None) -> None:
     if args.streaming:
         from benchmarks.streaming_bench import run_streaming_bench
         run_streaming_bench(quick=args.quick, check=args.check)
+        return
+    if args.alerts:
+        from benchmarks.alerts_bench import run_alerts_bench
+        run_alerts_bench(quick=args.quick, check=args.check)
         return
     if args.checkpoint:
         from benchmarks.checkpoint_bench import run_checkpoint_bench

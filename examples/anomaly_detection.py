@@ -4,7 +4,11 @@ in, and flag neighborhoods whose activity exceeds a z-score threshold.
 
 A *continuous* query needs always-fresh results, so the session pins it
 all-push (``Query(continuous=True)``) instead of cost-optimized push/pull —
-the paper's continuous class expressed as a query flag.
+the paper's continuous class expressed as a query flag. The anomaly
+threshold itself is a *standing alert*: each reader's per-node z-score
+cutoff is registered once (``QueryHandle.on_threshold``) and evaluated on
+device inside every write step — flagged neighborhoods arrive as compact
+fired sets (``drain_fired``), no per-round poll over all readers.
 
     PYTHONPATH=src python examples/anomaly_detection.py
 
@@ -31,7 +35,7 @@ calls = session.register(Query(agg="count",
                                continuous=True))   # always fresh => all-push
 
 rng = np.random.default_rng(0)
-readers = np.array(session.readers)
+readers = np.sort(np.array(session.readers))
 writers = np.array(session.writers)
 
 # ---- phase 1: normal traffic establishes each node's OWN baseline
@@ -41,13 +45,22 @@ for _ in range(12):
 base = np.ravel(session.read(calls, readers))
 print(f"baseline ego-activity: mean={base.mean():.1f} max={base.max():.0f}")
 
+# ---- arm the standing alert: score > 4 <=> count > base + 4*sqrt(base+1),
+# one per-reader threshold array, evaluated on device from here on
+alert = calls.on_threshold(above=(base + 4.0 * np.sqrt(base + 1.0)),
+                           readers=readers)
+
 # ---- phase 2: a hot cluster floods calls (their windows saturate at cap)
 hot = rng.choice(writers, 12, replace=False)
 for _ in range(12):
     session.update(np.concatenate([rng.choice(hot, 480),
                                    rng.choice(writers, 32)]))
+fired = sorted({int(b) for batch in alert.fired() for b in batch.base_ids})
+print(f"standing alert fired on {len(fired)} neighborhoods "
+      f"(pushed, not polled)")
+
+# ---- polled ground truth: the same predicate by explicit readback
 act = np.ravel(session.read(calls, readers))
-# per-node Poisson-style deviation score against its own baseline
 score = (act - base) / np.sqrt(base + 1.0)
 flagged = readers[score > 4.0]
 ris = session.bipartite.reader_input_sets()
@@ -55,4 +68,9 @@ truly_hot = [r for r in flagged if set(map(int, hot)) & ris[int(r)]]
 print(f"flagged {len(flagged)} anomalous neighborhoods "
       f"(score > 4); {len(truly_hot)} contain a flooding caller")
 assert len(flagged) > 0 and len(truly_hot) / max(1, len(flagged)) > 0.9
+# every neighborhood currently over its cutoff crossed it mid-stream, so the
+# push path must have reported it (the converse can differ: a fired reader
+# may have decayed back under its cutoff by the final read)
+assert set(int(r) for r in flagged) <= set(fired), \
+    "push-based fired set missed a polled anomaly"
 print("PASS: anomaly neighborhoods localize the hot cluster")

@@ -12,6 +12,12 @@ Public surface:
   * The low-level tier stays public for substrate users: ``EagrEngine``,
     ``DynamicOverlay``, ``partition_overlay`` / ``StackedShardedEngine`` /
     ``ShardedDynamic``, ``build_bipartite``, ``construct_vnm``.
+  * Standing alerts: ``EagrSession.register_alert`` /
+    ``QueryHandle.on_threshold`` with :class:`AlertSpec`,
+    :class:`AlertHandle` and :class:`FiredBatch` — device-evaluated
+    predicate queries piggybacked on the write step, compact fired-set
+    readback (``repro.streams.alerts``; :class:`PollOracle` is the
+    poll-everything parity/bench reference).
   * Durable sessions: ``EagrSession.save`` / ``EagrSession.restore`` /
     ``EagrSession.stats`` with :class:`SessionStats`, :class:`FlushReport`,
     :class:`AdaptReport`, the :class:`CheckpointManager` substrate and the
@@ -48,6 +54,11 @@ _EXPORTS = {
     "SessionStats": "repro.session",
     "FlushReport": "repro.session",
     "AdaptReport": "repro.session",
+    "AlertHandle": "repro.session",
+    "AlertSpec": "repro.streams.alerts",
+    "AlertSet": "repro.streams.alerts",
+    "FiredBatch": "repro.streams.alerts",
+    "PollOracle": "repro.streams.alerts",
     "CheckpointManager": "repro.distributed.checkpoint",
     "SessionRecoveryDriver": "repro.distributed.fault",
     "WindowSpec": "repro.core.window",

@@ -948,6 +948,12 @@ class EagrEngine:
                    if headroom and headroom > 1.0 else None)
             plan = compile_plan(overlay, decisions, backend=backend, pad=pad)
         self.plan = plan
+        # standing alerts (streams.alerts.AlertSet) — None for the common
+        # case, so non-alert sessions keep the plain write bodies untouched
+        self.alerts = None
+        # continuous groups pin every churn-added node PUSH through patches
+        # (always-fresh readers; alert evaluation depends on it)
+        self.pin_push = False
         self._rebind()
         self.state = self.init_state()
         # host-side logical clock mirror + extremal-path eviction bookkeeping:
@@ -978,6 +984,31 @@ class EagrEngine:
             _read_body, self.plan.meta, self.agg, self.plan.arrays)
         self._read_sparse = functools.partial(
             _read_body_sparse, self.plan.meta, self.agg, self.plan.arrays)
+        if self.alerts is not None:
+            from repro.streams.alerts import _alert_write
+            step = (write_step_sum if self.agg.combine == "sum"
+                    else write_step_extremal)
+            step_sp = (write_step_sum_sparse if self.agg.combine == "sum"
+                       else write_step_extremal_sparse)
+            cap = self.alerts.cap
+            self._write_alert = functools.partial(
+                _alert_write, step, self.plan.meta, self.agg, self.spec,
+                cap, self.plan.arrays)
+            self._write_alert_sparse = functools.partial(
+                _alert_write, step_sp, self.plan.meta, self.agg, self.spec,
+                cap, self.plan.arrays)
+
+    def attach_alerts(self, alerts) -> None:
+        """Attach an ``AlertSet``: resolves its reader rows against the live
+        plan, binds the fused write+eval bodies, and from the next write on
+        every batch carries its own compact fired-set evaluation."""
+        self.alerts = alerts
+        self._rebind()
+        try:
+            alerts.sync(self)
+        except Exception:
+            self.alerts = None
+            raise
 
     def init_state(self) -> EngineState:
         windows = init_windows(self.plan.meta.n_writers, self.spec)
@@ -1123,11 +1154,7 @@ class EagrEngine:
             act_d = jax.device_put(tuple(
                 np.ascontiguousarray(a, np.int32) for a in active))
         if self.agg.combine == "sum":
-            if active is None:
-                self.state = self._write(self.state, rows_d, vals_d, mask_d)
-            else:
-                self.state = self._write_sparse(self.state, rows_d, vals_d,
-                                                mask_d, act_d)
+            extra = () if active is None else (act_d,)
         else:
             if self.spec.kind == "time":
                 if n_live:
@@ -1138,12 +1165,24 @@ class EagrEngine:
             prev = self._last_eval_now
             self._last_eval_now = self._now_host
             prev_d = jax.device_put(np.float32(prev))
-            if active is None:
-                self.state = self._write(self.state, rows_d, vals_d, mask_d,
-                                         prev_d)
-            else:
-                self.state = self._write_sparse(self.state, rows_d, vals_d,
-                                                mask_d, prev_d, act_d)
+            extra = (prev_d,) if active is None else (prev_d, act_d)
+        al = self.alerts
+        if al is not None and al.enabled and al.n_placed:
+            # fused write+eval: same step body plus the alert predicate
+            # sweep, one program — fired sets stay on device until the
+            # caller's readback boundary
+            fn = self._write_alert if active is None \
+                else self._write_alert_sparse
+            now_eval = self._now_host
+            self.state, al.state, count, idx, avals, fired, m = fn(
+                self.state, al.state, rows_d, vals_d, mask_d, *extra)
+            al.push_pending(now_eval, count, idx, avals, fired, m)
+        elif active is None:
+            self.state = self._write(self.state, rows_d, vals_d, mask_d,
+                                     *extra)
+        else:
+            self.state = self._write_sparse(self.state, rows_d, vals_d,
+                                            mask_d, *extra)
         self._now_host += 1.0
 
     # -------------------------------------------------- structural updates
@@ -1163,7 +1202,8 @@ class EagrEngine:
         Returns the ``plan_patch.PatchResult``."""
         from repro.core.plan_patch import patch_plan
 
-        res = patch_plan(self.plan, delta, overlay=self.overlay, growth=growth)
+        res = patch_plan(self.plan, delta, overlay=self.overlay,
+                         growth=growth, pin_push=self.pin_push)
         if res.reason == "empty delta":
             return res  # nothing changed: skip the state refresh entirely
         self.plan = res.plan
@@ -1177,6 +1217,10 @@ class EagrEngine:
         self.state = EngineState(windows, pao, self.state.now)
         self._last_eval_now = self._now_host
         self._rebind()
+        if self.alerts is not None:
+            # carry alert rows through churn: retired readers drop, moved
+            # readers follow their node, query-wide alerts adopt new readers
+            self.alerts.sync(self, retired=res.retired_reader_bases)
         return res
 
     def adopt_decisions(self, decisions: np.ndarray) -> "ExecPlan":
@@ -1212,6 +1256,8 @@ class EagrEngine:
         self.state = EngineState(windows, pao, self.state.now)
         self._last_eval_now = self._now_host
         self._rebind()
+        if self.alerts is not None:
+            self.alerts.sync(self)
 
     def read_batch(self, base_ids: np.ndarray, batch_size: int | None = None):
         """Answer a batch of reads. Returns finalized answers (B, ...).

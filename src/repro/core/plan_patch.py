@@ -495,6 +495,9 @@ class PatchResult:
     program: PatchProgram | None = None      # device program (in-capacity
                                              # patches) — reusable by stacked
                                              # deployments for slice patching
+    retired_reader_bases: list[int] = dataclasses.field(default_factory=list)
+                                             # reader bases this delta removed
+                                             # (standing alerts on them drop)
 
     @property
     def kind(self) -> str:
@@ -531,15 +534,19 @@ def _relax_levels(host: PlanHost, seeds: set[int]) -> set[int]:
     return changed
 
 
-def _update_decisions(host: PlanHost, delta: OverlayDelta) -> set[int]:
+def _update_decisions(host: PlanHost, delta: OverlayDelta, *,
+                      pin_push: bool = False) -> set[int]:
     """Default decisions for new nodes (writers PUSH; interiors PUSH iff all
     inputs are PUSH; readers PULL), then enforce the dataflow invariant —
     no PULL upstream of a PUSH — by flipping violators PULL and cascading
-    downstream. Returns every node whose decision changed."""
+    downstream. ``pin_push`` pins every new node PUSH — the continuous-query
+    class (always-fresh readers; what standing alerts predicate on), where
+    churn-added readers must stay push-maintained like their compile-time
+    peers. Returns every node whose decision changed."""
     changed: set[int] = set()
     for nid in range(delta.n_nodes_before, delta.n_nodes_after):
         k = host.kinds[nid]
-        if k == "W":
+        if pin_push or k == "W":
             d = PUSH
         elif k == "R":
             d = PULL
@@ -676,7 +683,8 @@ def _rebuild_level(host: PlanHost, th: TableHost, table: str, l: int,
 # --------------------------------------------------------------------- patch
 def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
                overlay: Overlay | None = None,
-               growth: float = 2.0) -> PatchResult:
+               growth: float = 2.0,
+               pin_push: bool = False) -> PatchResult:
     """Apply one ``OverlayDelta`` to a live plan.
 
     In-capacity updates lower the delta to a ``PatchProgram`` and rewrite the
@@ -685,7 +693,8 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     compiled program); overflows recompile with ``growth`` headroom.
     ``overlay`` is only needed on the first patch of a plan, to seed the host
     bookkeeping; it must be the (unpruned) overlay the plan was compiled
-    from."""
+    from. ``pin_push`` keeps churn-added nodes PUSH-decided (continuous
+    groups)."""
     if delta.empty:
         return PatchResult(plan, False, "empty delta", None, [], {})
     host: PlanHost = plan.host  # type: ignore[assignment]
@@ -728,11 +737,13 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     host.retired_writer_bases -= set(delta.new_writers)
 
     changed_level = _relax_levels(host, set(delta.nodes))
-    changed_dec = _update_decisions(host, delta)
+    changed_dec = _update_decisions(host, delta, pin_push=pin_push)
     depth = int(host.level[: host.n_real].max()) if host.n_real else 0
 
     retired_rows = [plan.writer_row_of_base[b] for b in delta.retired_writers
                     if b in plan.writer_row_of_base]
+    retired_bases = sorted(
+        set(delta.retired_readers) - set(delta.new_readers))
 
     # ---------------------------------------------- phase B: capacity gates
     def fallback(reason: str) -> PatchResult:
@@ -740,7 +751,8 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
         _apply_base_maps(new_plan, host, delta)
         stats["reason"] = reason
         return PatchResult(new_plan, True, reason, new_overlay,
-                           retired_rows, stats)
+                           retired_rows, stats,
+                           retired_reader_bases=retired_bases)
 
     if host.n_real > cap:
         return fallback("node capacity")
@@ -890,7 +902,7 @@ def patch_plan(plan: ExecPlan, delta: OverlayDelta, *,
     if host.auto_verify:
         host.verify_device(plan)
     return PatchResult(plan, False, None, None, retired_rows, stats,
-                       program=prog)
+                       program=prog, retired_reader_bases=retired_bases)
 
 
 def _apply_base_maps(plan: ExecPlan, host: PlanHost,

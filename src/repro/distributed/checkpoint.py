@@ -426,6 +426,20 @@ def snapshot_session(session) -> tuple[dict, dict]:
             arrays[f"g{i}.now"] = np.asarray(jax.device_get(eng.state.now))
             arrays[f"g{i}.expiry"] = np.asarray(eng._expiry, np.float64)
             arrays[f"g{i}.flog"] = np.asarray(eng.frontier_log, np.int64)
+        al = getattr(eng, "alerts", None)
+        if al is not None and al.n_alerts:
+            # standing alerts: packed per-base columns (armed/debounce/ref
+            # state rides the dynamic fields) + JSON spec descriptors. The
+            # snapshot is placement-free (base ids, not rows), so it
+            # restores onto any shard layout without re-firing.
+            aarr, aspecs = al.snapshot()
+            arrays.update({f"g{i}.alert.{k}": v for k, v in aarr.items()})
+            gobj["alerts"] = aspecs
+            gobj["alert_cap"] = int(al.cap)
+            gobj["alert_handles"] = [
+                {"aid": int(aid), "qid": int(h.query.qid)}
+                for aid, h in sorted(session._alerts.items())
+                if h.query.group is g]
         gobjs.append(gobj)
 
     gi_of = {id(g): i for i, g in enumerate(groups)}
@@ -439,7 +453,7 @@ def snapshot_session(session) -> tuple[dict, dict]:
                         if h.query.readers is not None else None),
         })
 
-    ing = session.ingest_stats
+    ing = session._ingest_stats()
     objs = {
         "format": 1,
         "config": {
@@ -459,6 +473,7 @@ def snapshot_session(session) -> tuple[dict, dict]:
             "dup": bool(session._master_dup),
             "seq": session._seq,
             "next_qid": session._next_qid,
+            "next_aid": session._next_aid,
             "ops_since_adapt": session._ops_since_adapt,
             "ckpt_every": session.ckpt_every,
             "ckpt_keep": session.ckpt_keep,
@@ -524,6 +539,7 @@ def _restore_group_same(session, i: int, gobj: dict, arrays: dict,
         g.dec_global = np.asarray(arrays[f"g{i}.dec"], np.int64)
         g.engine = StackedShardedEngine(g.sharded, agg, spec,
                                         base_capacity=session.n_base)
+        g.engine.pin_push = g.continuous
         g.engine.adopt_state(EngineState(win, pao, now),
                              now_host=gobj["now"],
                              last_eval_now=arrays[f"g{i}.leval"])
@@ -531,6 +547,7 @@ def _restore_group_same(session, i: int, gobj: dict, arrays: dict,
         plan = plan_from_snapshot(_slice(arrays, f"g{i}.plan."),
                                   gobj["plan"])
         g.engine = EagrEngine(master_ov, plan.decision, agg, spec, plan=plan)
+        g.engine.pin_push = g.continuous
         g.engine.adopt_state(EngineState(win, pao, now),
                              now_host=gobj["now"],
                              last_eval_now=gobj["leval"],
@@ -617,6 +634,7 @@ def _restore_group_reshard(session, i: int, gobj: dict, arrays: dict,
         g.dec_global = dec
         g.engine = StackedShardedEngine(g.sharded, agg, spec,
                                         base_capacity=session.n_base)
+        g.engine.pin_push = g.continuous
         wins, paos = [], []
         for plan in g.sharded.shard_plans:
             w = window_state_from_host(take_window_rows(big, rows_for(plan)))
@@ -631,6 +649,7 @@ def _restore_group_reshard(session, i: int, gobj: dict, arrays: dict,
         g.engine = EagrEngine(basis, dec, agg, spec,
                               backend=session.backend,
                               headroom=session.headroom)
+        g.engine.pin_push = g.continuous
         plan = g.engine.plan
         host_win = take_window_rows(big, rows_for(plan))
         w = window_state_from_host(host_win)
@@ -699,6 +718,8 @@ def restore_session(directory: str, *, step: int | None = None,
     sess._groups = {}
     sess._handles = {}
     sess._next_qid = int(cfg["next_qid"])
+    sess._alerts = {}
+    sess._next_aid = int(cfg.get("next_aid") or 0)
     sess._value_dim = cfg["value_dim"]
     sess._wcount = np.asarray(arrays["wcount"], np.float64).copy()
     sess._rcount = np.asarray(arrays["rcount"], np.float64).copy()
@@ -750,4 +771,31 @@ def restore_session(directory: str, *, step: int | None = None,
                              spec=group.spec, session=sess, group=group)
         group.handles.append(handle.qid)
         sess._handles[handle.qid] = handle
+
+    # standing alerts: rebuild each group's AlertSet from the packed columns
+    # (armed/debounce/last-measure state restored verbatim — restored
+    # sessions never re-fire alerts the saved one already delivered) and
+    # re-attach, which re-places rows against the restored (or resharded)
+    # plans and recompiles the fused write+eval step on first write
+    for i, gobj in enumerate(objs["groups"]):
+        aspecs = gobj.get("alerts")
+        if not aspecs:
+            continue
+        from repro.session import AlertHandle
+        from repro.streams.alerts import AlertSet, AlertSpec
+        g = groups[i]
+        alerts = AlertSet.from_snapshot(
+            _slice(arrays, f"g{i}.alert."), aspecs,
+            cap=int(gobj.get("alert_cap") or 0) or None)
+        g.engine.attach_alerts(alerts)
+        qid_of = {int(e["aid"]): int(e["qid"])
+                  for e in gobj.get("alert_handles", ())}
+        for e in aspecs:
+            aid = int(e["aid"])
+            qh = sess._handles.get(qid_of.get(aid, -1))
+            if qh is None:
+                continue
+            sess._alerts[aid] = AlertHandle(
+                aid=aid, spec=AlertSpec.from_json(e["spec"]),
+                query=qh, session=sess)
     return sess

@@ -164,6 +164,36 @@ def _stacked_write_extremal_sparse(meta, agg, spec, mesh, arrays, state,
         (arrays, state, wmap, ids, vals, valid, prev_now, active))
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
+def _stacked_write_alert(step, meta, agg, spec, cap, mesh, arrays, state,
+                         astate, wmap, ids, vals, valid, *extra):
+    """Stacked twin of ``streams.alerts._alert_write``: the per-shard pure
+    write body (``step`` — dense/sparse x sum/extremal, a static argument)
+    plus the alert predicate sweep over that shard's own slice of the alert
+    columns. Each reader is owned by exactly one shard, so the per-shard
+    compact fired buffers are disjoint by construction and the only
+    cross-shard exchange is ONE collective: the psum of the per-shard fired
+    counts, which replicates the batch's global total so the host readback
+    touches a single scalar."""
+    def body(arrays, state, astate, wmap, ids_c, vals_c, valid_c, *extra):
+        ids = lax.all_gather(ids_c, SHARD_AXIS, tiled=True)
+        vals = lax.all_gather(vals_c, SHARD_AXIS, tiled=True)
+        valid = lax.all_gather(valid_c, SHARD_AXIS, tiled=True)
+        rows = wmap[jnp.clip(ids, 0, wmap.shape[0] - 1)]
+        mask = valid & (rows >= 0)
+        ns = step(meta, agg, spec, arrays, state, jnp.maximum(rows, 0),
+                  vals, mask, *extra)
+        from repro.streams.alerts import alert_eval
+        na, count, idx, avals, fired, m = alert_eval(
+            agg, astate, ns.pao, ns.now - 1.0, cap)
+        total = lax.psum(count, SHARD_AXIS)
+        return ns, na, total, idx, avals, fired, m
+
+    return _run_stacked(
+        mesh, body,
+        (arrays, state, astate, wmap, ids, vals, valid) + extra)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
 def _stacked_read(meta, agg, mesh, arrays, state, rmap, ids, valid):
     def body(arrays, state, rmap, ids_c, valid_c):
@@ -259,6 +289,8 @@ class StackedShardedEngine:
         self._reader_owner: dict[int, int] = {}
         self._pending_retired: dict[int, list[int]] = {}
         self._needs_restack = False
+        self.alerts = None  # streams.alerts.AlertSet (attach_alerts)
+        self.pin_push = False  # continuous groups: churn-added nodes stay PUSH
         # host-side clocks mirror EagrEngine's; `now` advances in lockstep
         # (every global batch runs on every shard) but the last PAO-eval
         # instant is PER SHARD — a slice patch refreshes one shard's PAOs
@@ -266,6 +298,25 @@ class StackedShardedEngine:
         self._now_host = 0.0
         self._last_eval_now = np.zeros(self.n_shards, np.float32)
         self.refresh_owner_maps()
+
+    @property
+    def shard_plans(self):
+        """Aligned per-shard ``ExecPlan`` list (the seam ``AlertSet.sync``
+        resolves reader rows against)."""
+        return self.sharded.shard_plans
+
+    def attach_alerts(self, alerts) -> None:
+        """Attach an ``AlertSet`` over the stack: rows resolve to (owner
+        shard, node) and every subsequent global batch runs the fused
+        write+eval program with per-shard disjoint fired buffers."""
+        self.alerts = alerts
+        alerts.sync(self)
+
+    def _put_alert_state(self, host_state):
+        """Alert columns are stacked (S, n_rows) leaves — pin them to the
+        canonical shard-axis sharding like every other stacked input so the
+        fused program keeps one cache entry."""
+        return self._commit(jax.device_put(host_state))
 
     # ------------------------------------------------------------------ state
     def _commit(self, tree):
@@ -417,15 +468,14 @@ class StackedShardedEngine:
         if active is not None:
             act_d = jax.device_put(tuple(
                 np.ascontiguousarray(a) for a in active))
+        al = self.alerts
+        with_alerts = al is not None and al.enabled and al.n_placed
         if self.agg.combine == "sum":
-            if active is None:
-                self.state = _stacked_write_sum(
-                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                    self.state, self.writer_map, ids, vals, valid)
-            else:
-                self.state = _stacked_write_sum_sparse(
-                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                    self.state, self.writer_map, ids, vals, valid, act_d)
+            extra = () if active is None else (act_d,)
+            step = write_step_sum if active is None else \
+                write_step_sum_sparse
+            plain = _stacked_write_sum if active is None else \
+                _stacked_write_sum_sparse
         else:
             # unlike EagrEngine there is no all-dropped-batch skip (a global
             # batch always dispatches), so no expiry-deadline bookkeeping —
@@ -437,15 +487,23 @@ class StackedShardedEngine:
             prev = jax.device_put(self._last_eval_now)
             self._last_eval_now = np.full(self.n_shards, self._now_host,
                                           np.float32)
-            if active is None:
-                self.state = _stacked_write_extremal(
-                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                    self.state, self.writer_map, ids, vals, valid, prev)
-            else:
-                self.state = _stacked_write_extremal_sparse(
-                    self.meta, self.agg, self.spec, self.mesh, self.arrays,
-                    self.state, self.writer_map, ids, vals, valid, prev,
-                    act_d)
+            extra = (prev,) if active is None else (prev, act_d)
+            step = write_step_extremal if active is None else \
+                write_step_extremal_sparse
+            plain = _stacked_write_extremal if active is None else \
+                _stacked_write_extremal_sparse
+        if with_alerts:
+            now_eval = self._now_host
+            out = _stacked_write_alert(
+                step, self.meta, self.agg, self.spec, al.cap, self.mesh,
+                self.arrays, self.state, al.state, self.writer_map,
+                ids, vals, valid, *extra)
+            self.state, al.state, total, idx, avals, fired, m = out
+            al.push_pending(now_eval, total, idx, avals, fired, m)
+        else:
+            self.state = plain(
+                self.meta, self.agg, self.spec, self.mesh, self.arrays,
+                self.state, self.writer_map, ids, vals, valid, *extra)
         self._now_host += 1.0
 
     def read_batch(self, base_ids: np.ndarray,
@@ -482,7 +540,7 @@ class StackedShardedEngine:
         wm_before = dict(plan.writer_row_of_base)
         rm_before = dict(plan.reader_node_of_base)
         res = patch_plan(plan, delta, overlay=self.sharded.shards[s],
-                         growth=growth)
+                         growth=growth, pin_push=self.pin_push)
         if res.reason == "empty delta":
             return res
         self.sharded.shard_plans[s] = res.plan
@@ -499,6 +557,8 @@ class StackedShardedEngine:
             self.mesh, self.arrays, res.program, jax.device_put(flags)))
         self._refresh_shard_state(s, res.retired_writer_rows)
         self._patch_owner_maps(s, wm_before, rm_before, res.plan)
+        if self.alerts is not None:
+            self.alerts.sync(self, retired=res.retired_reader_bases)
         return res
 
     def _patch_owner_maps(self, s: int, wm_before: dict, rm_before: dict,
@@ -601,3 +661,5 @@ class StackedShardedEngine:
                                       np.float32)
         self._needs_restack = False
         self.refresh_owner_maps()
+        if self.alerts is not None:
+            self.alerts.sync(self)

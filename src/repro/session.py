@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Iterable, Mapping
 
 import numpy as np
@@ -61,7 +62,7 @@ from repro.core.vnm import construct_vnm
 from repro.core.window import WindowSpec
 
 __all__ = ["Query", "QueryHandle", "EagrSession", "bucket_batch",
-           "SessionStats", "FlushReport", "AdaptReport"]
+           "SessionStats", "FlushReport", "AdaptReport", "AlertHandle"]
 
 
 # ------------------------------------------------------------------- queries
@@ -151,6 +152,34 @@ class QueryHandle:
 
     def read(self, ids) -> np.ndarray:
         return self.session.read(self, ids)
+
+    def on_threshold(self, *, above=None, below=None, delta=None,
+                     hysteresis: float = 0.0, debounce: float = 0.0,
+                     component: int = 0, readers=None) -> "AlertHandle":
+        """Register a standing alert on this query — sugar for
+        :meth:`EagrSession.register_alert`. Thresholds may be scalars or
+        per-reader arrays (matched against the sorted reader list)."""
+        from repro.streams.alerts import AlertSpec
+        return self.session.register_alert(
+            self, AlertSpec(above=above, below=below, delta=delta,
+                            hysteresis=hysteresis, debounce=debounce,
+                            component=component),
+            readers=readers)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AlertHandle:
+    """Registered standing alert: the ticket fired batches are attributed to
+    and drained with (:meth:`EagrSession.drain_fired`)."""
+
+    aid: int
+    spec: "object"           # streams.alerts.AlertSpec
+    query: QueryHandle
+    session: "EagrSession"
+
+    def fired(self) -> list:
+        """Drain this alert's :class:`~repro.streams.alerts.FiredBatch` es."""
+        return self.session.drain_fired(self)
 
 
 # -------------------------------------------------------------- typed reports
@@ -273,6 +302,9 @@ class _EngineGroup:
             self.engine = EagrEngine(basis, decisions, agg, spec,
                                      backend=session.backend,
                                      headroom=session.headroom)
+        # churn-added nodes must inherit the all-push pin, or alerted
+        # readers added mid-stream would go stale (and fail alert sync)
+        self.engine.pin_push = bool(continuous)
 
     # ------------------------------------------------------------- mutations
     @property
@@ -324,6 +356,10 @@ class _EngineGroup:
         + re-adopts only when a flip actually happened. Continuous groups are
         pinned all-push and never adapt."""
         if self.continuous:
+            return 0
+        if getattr(self.engine, "alerts", None):
+            # standing alerts predicate on push-maintained reader PAOs; a
+            # pull flip would silence them — alerted groups never adapt
             return 0
         if self.sdyn is None:
             plan = self.engine.plan
@@ -428,6 +464,8 @@ class EagrSession:
         self._groups: dict[tuple, _EngineGroup] = {}
         self._handles: dict[int, QueryHandle] = {}
         self._next_qid = 0
+        self._alerts: dict[int, AlertHandle] = {}
+        self._next_aid = 0
         self._value_dim: int | None = None
         self._wcount = np.zeros(self.n_base, np.float64)
         self._rcount = np.zeros(self.n_base, np.float64)
@@ -508,6 +546,8 @@ class EagrSession:
     def unregister(self, handle: QueryHandle) -> None:
         """Retire one query; the last query of a group releases its engine."""
         self._check_handle(handle)
+        for ah in [a for a in self._alerts.values() if a.query is handle]:
+            self.unregister_alert(ah)
         del self._handles[handle.qid]
         handle.group.handles.remove(handle.qid)
         if not handle.group.handles:
@@ -515,6 +555,113 @@ class EagrSession:
             del self._groups[handle.group.key]
         if not self._groups:
             self._value_dim = None  # nothing constrains the stream anymore
+
+    # ---------------------------------------------------------- standing alerts
+    def register_alert(self, handle: QueryHandle, spec=None, *,
+                       readers=None, **predicates) -> AlertHandle:
+        """Register a standing alert against a registered query: the
+        predicate (``AlertSpec``, or keyword thresholds ``above``/``below``/
+        ``delta`` + ``hysteresis``/``debounce``/``component``) is evaluated
+        **on device inside the query's write step** from then on, and only
+        the readers that fired come back per batch (:meth:`drain_fired`).
+
+        ``readers`` scopes the alert (defaults to the query's own scope;
+        ``None`` on an unscoped query tracks every reader through churn).
+        Requires push-maintained readers — register the query with
+        ``continuous=True``. Thresholds may be per-reader arrays, matched
+        positionally against the sorted reader list."""
+        from repro.streams.alerts import (
+            AlertSet,
+            AlertSpec,
+            check_alert_aggregate,
+        )
+
+        self._check_handle(handle)
+        if spec is None:
+            spec = AlertSpec(**predicates)
+        elif predicates:
+            raise ValueError("pass an AlertSpec OR keyword thresholds, "
+                             "not both")
+        md = check_alert_aggregate(handle.agg)
+        if not (0 <= int(spec.component) < md):
+            raise ValueError(f"component={spec.component} out of range for "
+                             f"{handle.agg.name!r} (measure dim {md})")
+        # alerts resolve against the live plan — land pending churn first
+        # and quiesce the ingest ring so the attach sees settled state
+        if self._pending:
+            self.flush()
+        elif self._pipeline is not None:
+            self._pipeline.flush()
+        scope = handle.readers
+        if readers is None:
+            readers = scope  # None + unscoped query = dynamic (all readers)
+        elif scope is not None:
+            outside = [int(r) for r in readers if int(r) not in scope]
+            if outside:
+                raise ValueError(f"alert readers {sorted(outside)[:8]} are "
+                                 "outside the query's readers scope")
+        engine = handle.group.engine
+        alerts = engine.alerts
+        if alerts is None:
+            alerts = AlertSet()
+        aid = self._next_aid
+        alerts.register(aid, spec, () if readers is None else readers,
+                        dynamic=readers is None,
+                        engine=engine if engine.alerts is alerts else None)
+        if engine.alerts is not alerts:
+            engine.attach_alerts(alerts)
+        self._next_aid += 1
+        ahandle = AlertHandle(aid=aid, spec=spec, query=handle, session=self)
+        self._alerts[aid] = ahandle
+        return ahandle
+
+    def unregister_alert(self, ahandle: AlertHandle) -> None:
+        """Retire one standing alert; the last alert of an engine detaches
+        alert evaluation from its write path entirely."""
+        if self._alerts.get(getattr(ahandle, "aid", -1)) is not ahandle:
+            raise ValueError("unknown alert handle")
+        del self._alerts[ahandle.aid]
+        engine = ahandle.query.group.engine
+        alerts = engine.alerts
+        if alerts is None:
+            return
+        if self._pipeline is not None:
+            self._pipeline.flush()  # quiesce in-flight fused steps
+        alerts.collect()
+        alerts.unregister(ahandle.aid, engine)
+        if not alerts:
+            engine.alerts = None
+
+    @property
+    def alerts(self) -> list[AlertHandle]:
+        return list(self._alerts.values())
+
+    def drain_fired(self, ahandle: AlertHandle | None = None) -> list:
+        """Collect every fired batch produced since the last drain — the
+        compact readback of all standing alerts (optionally filtered to one
+        :class:`AlertHandle`). With a pipelined session the ring has already
+        collected completed slots at its boundaries; this adds a partial-slot
+        dispatch so every submitted event is observed."""
+        if self._pipeline is not None:
+            self._pipeline.drain()
+        out = []
+        for g in self._groups.values():
+            alerts = getattr(g.engine, "alerts", None)
+            if alerts is None:
+                continue
+            alerts.collect()
+            out.extend(alerts.pop_fired())
+        out.sort(key=lambda b: b.now)
+        if ahandle is not None:
+            keep = []
+            for b in out:
+                sel = b.aids == ahandle.aid
+                if sel.any():
+                    keep.append(dataclasses.replace(
+                        b, base_ids=b.base_ids[sel], values=b.values[sel],
+                        aids=b.aids[sel]))
+            return keep
+        return out
 
     @property
     def queries(self) -> list[QueryHandle]:
@@ -719,19 +866,25 @@ class EagrSession:
                               for g in self._groups.values()),
             patches_applied=patches,
             frontier=frontier_summary(logs),
-            ingest=self.ingest_stats,
+            ingest=self._ingest_stats(),
             construction=self.overlay_stats,
             last_checkpoint_step=self._last_ckpt_step,
         )
+
+    def _ingest_stats(self):
+        if self._pipeline is not None:
+            return self._pipeline.stats
+        return self._carry_ingest
 
     @property
     def ingest_stats(self):
         """Deprecated alias for ``stats().ingest`` — the live
         :class:`repro.streams.ingest.IngestStats` (``None`` until the first
         pipelined update; survives checkpoint/restore)."""
-        if self._pipeline is not None:
-            return self._pipeline.stats
-        return self._carry_ingest
+        warnings.warn(
+            "EagrSession.ingest_stats is deprecated; use stats().ingest",
+            DeprecationWarning, stacklevel=2)
+        return self._ingest_stats()
 
     # ------------------------------------------------------------- durability
     def save(self, directory: str | None = None, *, step: int | None = None,

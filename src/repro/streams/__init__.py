@@ -1,3 +1,4 @@
+from repro.streams.alerts import AlertSet, AlertSpec, FiredBatch, PollOracle
 from repro.streams.ingest import IngestPipeline, IngestStats
 from repro.streams.traces import (
     Trace,
@@ -15,4 +16,8 @@ __all__ = [
     "batched_playback",
     "IngestPipeline",
     "IngestStats",
+    "AlertSpec",
+    "AlertSet",
+    "FiredBatch",
+    "PollOracle",
 ]

@@ -108,6 +108,11 @@ class IngestPipeline:
         self._ids = [np.zeros(B, np.int64) for _ in range(self.depth)]
         self._vals = [np.zeros(vshape, np.float32) for _ in range(self.depth)]
         self._tokens: list = [None] * self.depth
+        # per-slot fired-set readback marks: [(AlertSet, seq)] recorded at
+        # dispatch — collected once the slot's token barrier proves those
+        # steps completed. Empty for sessions without standing alerts, so
+        # the non-alert path adds no transfers (transfer-guard invariant).
+        self._alert_marks: list = [None] * self.depth
         self._slot = 0
         self._fill = 0
         # a restored session hands back its saved counter block so lifetime
@@ -181,6 +186,10 @@ class IngestPipeline:
         # ``+ 0``: the scalar constant would be an implicit transfer under
         # the transfer guard
         self._tokens[s] = [jnp.copy(eng.state.now) for eng in self.engines]
+        marks = [(al, al.seq) for al in
+                 (getattr(eng, "alerts", None) for eng in self.engines)
+                 if al is not None]
+        self._alert_marks[s] = marks or None
         self.stats.max_in_flight = max(
             self.stats.max_in_flight,
             sum(t is not None for t in self._tokens))
@@ -194,6 +203,17 @@ class IngestPipeline:
             jax.block_until_ready(tok)
             self.stats.stall_s += time.perf_counter() - t0
             self._tokens[self._slot] = None
+            self._collect_marks(self._slot)
+
+    def _collect_marks(self, slot: int) -> None:
+        """Pop the fired sets whose steps the freed slot's token proves done.
+        The ``device_get`` inside ``collect_upto`` copies completed buffers —
+        it never becomes a steady-state sync point."""
+        marks = self._alert_marks[slot]
+        if marks is not None:
+            self._alert_marks[slot] = None
+            for al, upto in marks:
+                al.collect_upto(upto)
 
     # ----------------------------------------------------------------- control
     def drain(self) -> None:
@@ -214,6 +234,7 @@ class IngestPipeline:
             if tok is not None:
                 jax.block_until_ready(tok)
                 self._tokens[i] = None
+            self._collect_marks(i)
         self.stats.barrier_s += time.perf_counter() - t0
         self.stats.flushes += 1
 

@@ -1,0 +1,549 @@
+"""Standing alerts (PR 10): device-evaluated predicates fused into the write
+step must produce fired sets BIT-identical to the poll-everything oracle —
+across aggregates, window kinds, scalar/vector payloads, fired-set overflow,
+structural churn, and sharded stacking — while keeping the substrate's
+steady-state discipline (one trace, no implicit host transfers) and
+round-tripping armed/debounce state through checkpoints.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dataflow as D
+from repro.core.aggregates import make_aggregate
+from repro.core.bipartite import build_bipartite
+from repro.core.dynamic import DynamicOverlay
+from repro.core.engine import EagrEngine, bucket_batch
+from repro.core.vnm import construct_vnm
+from repro.core.window import WindowSpec
+from repro.graphs.generators import rmat_graph
+from repro.session import EagrSession, Query
+from repro.streams.alerts import (
+    AlertSet,
+    AlertSpec,
+    AlertState,
+    FiredBatch,
+    PollOracle,
+    alert_eval,
+    check_alert_aggregate,
+)
+from repro.streams.ingest import IngestPipeline
+
+
+# ---------------------------------------------------------------- fixtures
+def _basis(seed=3, n=150, e=900):
+    g = rmat_graph(n, e, seed=seed)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    dyn = DynamicOverlay.from_overlay(ov, bp.reader_input_sets())
+    return g, bp, dyn.to_overlay(prune=False)
+
+
+def _engine(basis, *, agg="sum", spec=None, **agg_kwargs):
+    # alerts require push-maintained readers, so the fixtures are all-PUSH
+    dec = np.full(basis.n_nodes, D.PUSH, np.int64)
+    return EagrEngine(basis, dec, make_aggregate(agg, **agg_kwargs),
+                      spec or WindowSpec("tuple", 4), headroom=2.0)
+
+
+def _batches(eng, *, n_batches, arrival, value_dim=1, seed=7, lo=0, hi=8):
+    writers = np.flatnonzero(eng.plan.routes.writer_row >= 0)
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        ids = rng.choice(writers, size=arrival).astype(np.int64)
+        shape = (arrival,) if value_dim == 1 else (arrival, value_dim)
+        vals = rng.integers(lo, hi, shape).astype(np.float32)
+        out.append((ids, vals))
+    return out
+
+
+def _alert_bases(eng, k=None):
+    bases = np.flatnonzero(eng.plan.routes.reader_node >= 0).astype(np.int64)
+    return bases if k is None else bases[:k]
+
+
+def _flat(batches):
+    """Order-free canonical form of a FiredBatch list for parity asserts."""
+    out = []
+    for b in batches:
+        for i in range(len(b)):
+            out.append((float(b.now), int(b.base_ids[i]),
+                        float(np.float32(b.values[i])), int(b.aids[i])))
+    return sorted(out)
+
+
+def _drive_parity(eng, spec, batches, *, bases=None, cap=None):
+    """Run identical batches through the fused push path and the poll
+    oracle; return (push, poll) canonical fired lists."""
+    bases = _alert_bases(eng) if bases is None else bases
+    al = AlertSet(cap)
+    al.register(0, spec, bases.tolist(), dynamic=False, engine=None)
+    eng.attach_alerts(al)
+    oracle = PollOracle(al)
+    oracle.resync(eng)
+    push, poll = [], []
+    for ids, vals in batches:
+        eng.write_batch(ids, vals, batch_size=len(ids))
+        ob = oracle.poll(eng, float(eng._now_host) - 1.0)
+        if len(ob):
+            poll.append(ob)
+    al.collect()
+    push = al.pop_fired()
+    eng.alerts = None
+    return _flat(push), _flat(poll)
+
+
+# ---------------------------------------------------- push-vs-poll parity
+def test_parity_sum_tuple_window():
+    _, _, basis = _basis()
+    eng = _engine(basis)
+    push, poll = _drive_parity(
+        eng, AlertSpec(above=10.0, hysteresis=1.0),
+        _batches(eng, n_batches=24, arrival=32))
+    assert push, "fixture never fired — thresholds too loose to test parity"
+    assert push == poll
+
+
+def test_parity_max_time_window():
+    """Extremal aggregate + time window: expiries change measures without a
+    write touching the reader — the fused eval must still see them."""
+    _, _, basis = _basis(seed=5)
+    eng = _engine(basis, agg="max", spec=WindowSpec("time", 3.0, capacity=8))
+    push, poll = _drive_parity(
+        eng, AlertSpec(above=6.0, below=0.5, hysteresis=0.25),
+        _batches(eng, n_batches=30, arrival=16, seed=11))
+    assert push
+    assert push == poll
+
+
+def test_parity_delta_predicate_with_debounce():
+    _, _, basis = _basis(seed=9)
+    eng = _engine(basis)
+    push, poll = _drive_parity(
+        eng, AlertSpec(delta=4.0, debounce=3.0),
+        _batches(eng, n_batches=24, arrival=32, seed=2))
+    assert push
+    assert push == poll
+
+
+def test_parity_vector_payload_component():
+    """Vector-valued windows: the alert predicates on one payload lane."""
+    _, _, basis = _basis(seed=4)
+    eng = _engine(basis, agg="sum", value_dim=3,
+                  spec=WindowSpec("tuple", 4, value_dim=3))
+    push, poll = _drive_parity(
+        eng, AlertSpec(above=9.0, component=2),
+        _batches(eng, n_batches=20, arrival=24, value_dim=3, seed=13))
+    assert push
+    assert push == poll
+
+
+def test_parity_per_reader_threshold_arrays():
+    _, _, basis = _basis(seed=6)
+    eng = _engine(basis)
+    bases = _alert_bases(eng)
+    rng = np.random.default_rng(0)
+    spec = AlertSpec(above=rng.uniform(4.0, 14.0, len(bases)).astype(
+        np.float32))
+    push, poll = _drive_parity(
+        eng, spec, _batches(eng, n_batches=24, arrival=32, seed=21),
+        bases=bases)
+    assert push
+    assert push == poll
+
+
+def test_overflow_recovers_exact_fired_set():
+    """A batch firing more than the compact capacity K must still report the
+    exact set (dense fallback), flagged with overflow=True."""
+    _, _, basis = _basis(seed=8)
+    eng = _engine(basis)
+    # above=-1 + a first batch touching many readers => mass fire through a
+    # 4-slot compact buffer
+    bases = _alert_bases(eng)
+    al = AlertSet(cap=4)
+    al.register(0, AlertSpec(above=-1.0), bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    oracle = PollOracle(al)
+    oracle.resync(eng)
+    fired_poll = []
+    for ids, vals in _batches(eng, n_batches=6, arrival=64, seed=3, lo=1):
+        eng.write_batch(ids, vals, batch_size=len(ids))
+        ob = oracle.poll(eng, float(eng._now_host) - 1.0)
+        if len(ob):
+            fired_poll.append(ob)
+    al.collect()
+    push = al.pop_fired()
+    assert any(b.overflow for b in push)
+    assert max(len(b) for b in push) > 4
+    assert _flat(push) == _flat(fired_poll)
+    eng.alerts = None
+
+
+# ----------------------------------------------- state-machine unit semantics
+def _mk_state(n, **over):
+    cols = {
+        "active": np.ones(n, bool),
+        "armed": np.ones(n, bool),
+        "hi": np.full(n, np.inf, np.float32),
+        "lo": np.full(n, -np.inf, np.float32),
+        "dthr": np.full(n, np.inf, np.float32),
+        "hys": np.zeros(n, np.float32),
+        "deb": np.zeros(n, np.float32),
+        "comp": np.zeros(n, np.int32),
+        "last_fire": np.full(n, -np.inf, np.float32),
+        "ref": np.zeros(n, np.float32),
+        "last_m": np.zeros(n, np.float32),
+    }
+    for k, v in over.items():
+        cols[k] = np.asarray(v, cols[k].dtype)
+    return AlertState(**{k: jax.device_put(v) for k, v in cols.items()})
+
+
+def _eval_seq(state, measures, cap=8):
+    """Feed a per-tick measure sequence for one row through alert_eval via a
+    sum aggregate (finalize = identity); return the fire ticks."""
+    agg = make_aggregate("sum")
+    fires = []
+    for t, m in enumerate(measures):
+        pao = jnp.full((1, agg.pao_dim), np.float32(m))
+        state, count, idx, vals, fired, _ = alert_eval(
+            agg, state, pao, jnp.float32(t), cap)
+        if int(count):
+            fires.append((t, float(np.asarray(vals)[0])))
+    return fires
+
+
+def test_hysteresis_one_fire_per_excursion():
+    """A reader flapping just across the threshold fires once; it must drop
+    back inside by the hysteresis margin before it can fire again."""
+    st0 = _mk_state(1, hi=[5.0], hys=[1.0], last_m=[0.0], ref=[0.0])
+    #        fire   flap (never re-arms: m stays > hi - hys = 4) re-arm  fire
+    seq = [6.0, 4.5, 6.0, 4.5, 6.0, 3.0, 7.0]
+    fires = _eval_seq(st0, seq)
+    assert [t for t, _ in fires] == [0, 6]
+
+
+def test_debounce_spaces_fires():
+    st0 = _mk_state(1, dthr=[0.5], deb=[3.0], last_m=[0.0], ref=[0.0])
+    # every tick trips the delta predicate; debounce admits every 3rd tick
+    seq = [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0]
+    fires = _eval_seq(st0, seq)
+    assert [t for t, _ in fires] == [0, 3, 6]
+
+
+def test_delta_ref_rebases_on_fire():
+    st0 = _mk_state(1, dthr=[3.0], last_m=[0.0], ref=[0.0])
+    # 0 -> 4 fires (|4-0|>3, ref := 4); 4 -> 6 quiet; 6 -> 8 fires (|8-4|>3)
+    fires = _eval_seq(st0, [4.0, 6.0, 8.0])
+    assert [t for t, _ in fires] == [0, 2]
+    assert fires[1][1] == 8.0
+
+
+def test_unchanged_measure_never_fires():
+    st0 = _mk_state(1, hi=[1.0], last_m=[5.0], ref=[5.0], armed=[True])
+    # measure sits above the threshold but never *changes* => no fire
+    assert _eval_seq(st0, [5.0, 5.0, 5.0]) == []
+
+
+# ------------------------------------------------------------ hypothesis sweep
+@settings(max_examples=20, deadline=None)
+@given(
+    agg=st.sampled_from(["sum", "max"]),
+    window=st.sampled_from([WindowSpec("tuple", 4),
+                            WindowSpec("time", 3.0, capacity=8)]),
+    above=st.floats(2.0, 20.0),
+    hys=st.floats(0.0, 2.0),
+    deb=st.floats(0.0, 4.0),
+    seed=st.integers(0, 50),
+)
+def test_parity_sweep(agg, window, above, hys, deb, seed):
+    _, _, basis = _basis(seed=3)
+    eng = _engine(basis, agg=agg, spec=window)
+    push, poll = _drive_parity(
+        eng, AlertSpec(above=np.float32(above), hysteresis=float(hys),
+                       debounce=float(deb)),
+        _batches(eng, n_batches=16, arrival=24, seed=seed))
+    assert push == poll
+
+
+# --------------------------------------------------------------- churn parity
+def test_parity_across_structural_churn():
+    """Edge churn mid-stream: alerted readers follow their node through the
+    patch, retired rows drop, and parity with a resynced oracle holds."""
+    g = rmat_graph(150, 900, seed=3)
+    sess = EagrSession(g, seed=0, ingest_batch=32, ingest_depth=2)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4),
+                            continuous=True))
+    ah = q.on_threshold(above=8.0, hysteresis=0.5)
+    eng = q.group.engine
+    oracle = PollOracle(eng.alerts)
+    oracle.resync(eng)
+    rng = np.random.default_rng(1)
+    push, poll = [], []
+
+    def drive(steps):
+        for _ in range(steps):
+            ids = rng.integers(0, 150, size=32)
+            vals = rng.integers(0, 8, 32).astype(np.float32)
+            sess.update(ids, vals)
+            if sess._pipeline is not None:
+                sess._pipeline.flush()
+            push.extend(sess.drain_fired())
+            ob = oracle.poll(eng, float(eng._now_host) - 1.0)
+            if len(ob):
+                poll.append(ob)
+
+    drive(8)
+    n_before = eng.alerts.n_alerts
+    for k in range(6):  # interleave structural churn with the stream
+        sess.add_edge(int(rng.integers(0, 150)), int(rng.integers(0, 150)))
+    sess.flush()
+    oracle2 = PollOracle(eng.alerts)   # oracle re-seeds from carried state
+    oracle2.resync(eng)
+    oracle = oracle2
+    drive(8)
+    assert _flat(push) == _flat(poll)
+    assert push, "churn parity fixture never fired"
+    # dynamic (unscoped) registration adopted any churn-added readers
+    assert eng.alerts.n_alerts >= n_before
+    sess.unregister_alert(ah)
+
+
+def test_dynamic_registration_adopts_new_readers():
+    g = rmat_graph(80, 400, seed=2)
+    sess = EagrSession(g, seed=0)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4),
+                            continuous=True))
+    q.on_threshold(above=1e9)  # readers=None on an unscoped query = dynamic
+    eng = q.group.engine
+    n0 = eng.alerts.n_alerts
+    assert n0 == len(_alert_bases(eng))
+    # a brand-new node with in-edges becomes a reader; the spec must follow
+    sess.add_node(80, in_neighbors=[0, 1, 2])
+    sess.flush()
+    eng = q.group.engine
+    assert eng.alerts.n_alerts > n0
+    assert 80 in eng.alerts._base.tolist()
+
+
+# ------------------------------------------------------ steady-state discipline
+def test_fused_step_keeps_one_trace():
+    from repro.streams.alerts import _alert_write
+
+    _, _, basis = _basis(seed=3)
+    eng = _engine(basis)
+    bases = _alert_bases(eng)
+    al = AlertSet()
+    al.register(0, AlertSpec(above=20.0), bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    _alert_write._clear_cache()
+    for ids, vals in _batches(eng, n_batches=12, arrival=32):
+        eng.write_batch(ids, vals, batch_size=32)
+    assert _alert_write._cache_size() == 1
+    al.collect()
+    eng.alerts = None
+
+
+def test_pipeline_steady_state_no_host_transfers():
+    """The fused write+eval through the ingest ring must stay transfer-clean:
+    fired-set marks are recorded at dispatch and read back only at slot
+    reuse, never as an implicit host->device upload."""
+    _, _, basis = _basis(seed=3)
+    eng = _engine(basis)
+    bases = _alert_bases(eng)
+    al = AlertSet()
+    al.register(0, AlertSpec(above=15.0), bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    pipe = IngestPipeline([eng], depth=2, device_batch=32)
+    batches = _batches(eng, n_batches=12, arrival=32, seed=5)
+    for ids, vals in batches[:6]:   # warm: compile + wrap the ring once
+        pipe.submit(ids, vals)
+    with jax.transfer_guard_host_to_device("disallow"):
+        for ids, vals in batches[6:]:
+            pipe.submit(ids, vals)
+        pipe.flush()
+    assert al.seq_done == al.seq and al.pending == 0
+    al.pop_fired()
+    eng.alerts = None
+
+
+def test_ring_boundary_collects_fired_sets():
+    """Fired sets land host-side at ring-slot reuse without any explicit
+    drain; an interleaved user drain must not double-count (seq marks)."""
+    _, _, basis = _basis(seed=3)
+    eng = _engine(basis)
+    bases = _alert_bases(eng)
+    al = AlertSet()
+    al.register(0, AlertSpec(above=8.0), bases.tolist(), dynamic=False)
+    eng.attach_alerts(al)
+    pipe = IngestPipeline([eng], depth=2, device_batch=32)
+    seen = []
+    for i, (ids, vals) in enumerate(
+            _batches(eng, n_batches=16, arrival=32, seed=9)):
+        pipe.submit(ids, vals)
+        if i == 7:       # user drains mid-ring: collect() races the marks
+            al.collect()
+        seen.extend(al.pop_fired())
+    pipe.flush()
+    seen.extend(al.pop_fired())
+    assert al.seq == al.seq_done
+    assert sum(len(b) for b in seen) > 0
+    # every dispatched step was collected exactly once
+    assert len({float(b.now) for b in seen}) == len(seen)
+    eng.alerts = None
+
+
+# ------------------------------------------------------------- stacked engines
+def test_stacked_fired_sets_match_single_engine():
+    from repro.distributed.eagr_shard import partition_overlay
+    from repro.distributed.stacked import StackedShardedEngine
+
+    g = rmat_graph(200, 1200, seed=9)
+    bp = build_bipartite(g)
+    ov, _ = construct_vnm(bp, variant="vnm_a", max_iterations=3, seed=0)
+    dec = np.full(ov.n_nodes, D.PUSH, np.int64)
+    agg, spec = make_aggregate("sum"), WindowSpec("tuple", 4)
+    single = EagrEngine(ov, dec, agg, spec)
+    sharded = partition_overlay(ov, dec, n_shards=4, seed=0)
+    stacked = StackedShardedEngine(sharded, agg, spec)
+
+    bases = _alert_bases(single)
+    aspec = AlertSpec(above=10.0, hysteresis=0.5)
+    for e in (single, stacked):
+        al = AlertSet()
+        al.register(0, aspec, bases.tolist(), dynamic=False)
+        e.attach_alerts(al)
+
+    rng = np.random.default_rng(4)
+    for _ in range(16):
+        ids = rng.choice(bp.writers, 64)
+        vals = rng.integers(0, 8, 64).astype(np.float32)
+        single.write_batch(ids, vals, batch_size=64)
+        stacked.write_batch(ids, vals, batch_size=64)
+    single.alerts.collect()
+    stacked.alerts.collect()
+    a = _flat(single.alerts.pop_fired())
+    b = _flat(stacked.alerts.pop_fired())
+    assert a, "stacked parity fixture never fired"
+    assert a == b
+    single.alerts = None
+    stacked.alerts = None
+
+
+# ----------------------------------------------------------- session API edges
+def test_register_alert_rejects_pull_readers():
+    g = rmat_graph(150, 900, seed=3)
+    sess = EagrSession(g, seed=0)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4)))
+    eng = q.group.engine
+    pull_readers = [int(b) for b in _alert_bases(eng)
+                    if eng.plan.decision[
+                        eng.plan.routes.reader_node[b]] != D.PUSH]
+    if not pull_readers:
+        pytest.skip("mincut made every reader PUSH on this fixture")
+    with pytest.raises(ValueError, match="PULL-decided"):
+        sess.register_alert(q, above=5.0, readers=pull_readers[:4])
+    assert eng.alerts is None  # rejected registration fully rolled back
+
+
+def test_register_alert_rejects_topk_and_bad_component():
+    g = rmat_graph(80, 400, seed=2)
+    sess = EagrSession(g, seed=0)
+    qk = sess.register(Query(agg=make_aggregate("topk", k=3, domain=16),
+                             window=WindowSpec("tuple", 4), continuous=True))
+    with pytest.raises(ValueError, match="topk"):
+        qk.on_threshold(above=1.0)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4),
+                            continuous=True))
+    with pytest.raises(ValueError, match="component"):
+        q.on_threshold(above=1.0, component=5)
+
+
+def test_one_predicate_per_reader_row():
+    g = rmat_graph(80, 400, seed=2)
+    sess = EagrSession(g, seed=0)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4),
+                            continuous=True))
+    eng = q.group.engine
+    bases = _alert_bases(eng)[:4].tolist()
+    sess.register_alert(q, above=5.0, readers=bases)
+    with pytest.raises(ValueError, match="already carry an alert"):
+        sess.register_alert(q, below=0.0, readers=bases[:1])
+
+
+def test_unregister_last_alert_detaches_eval():
+    from repro.streams.alerts import _alert_write
+
+    g = rmat_graph(80, 400, seed=2)
+    sess = EagrSession(g, seed=0)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 4),
+                            continuous=True))
+    eng = q.group.engine
+    ah = sess.register_alert(q, above=5.0,
+                             readers=_alert_bases(eng)[:4].tolist())
+    assert eng.alerts is not None and eng.alerts.n_alerts == 4
+    sess.unregister_alert(ah)
+    assert eng.alerts is None
+    with pytest.raises(ValueError, match="unknown alert handle"):
+        sess.unregister_alert(ah)
+
+
+def test_alert_eval_kill_switch(monkeypatch):
+    monkeypatch.setenv("EAGR_ALERT_EVAL", "0")
+    _, _, basis = _basis(seed=3)
+    eng = _engine(basis)
+    al = AlertSet()
+    al.register(0, AlertSpec(above=-1.0), _alert_bases(eng).tolist(),
+                dynamic=False)
+    eng.attach_alerts(al)
+    for ids, vals in _batches(eng, n_batches=4, arrival=32, lo=1):
+        eng.write_batch(ids, vals, batch_size=32)
+    al.collect()
+    assert not al.pop_fired()   # registered but detached: nothing fires
+    eng.alerts = None
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrips_armed_and_debounce_state():
+    g = rmat_graph(120, 600, seed=3)
+    sess = EagrSession(g, seed=0, ingest_batch=48, ingest_depth=2)
+    q = sess.register(Query(agg="sum", window=WindowSpec("tuple", 8),
+                            continuous=True))
+    ah = q.on_threshold(above=4.0, hysteresis=0.5, debounce=2.0)
+    eng = q.group.engine
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        ids = rng.integers(0, 120, size=48)
+        sess.update(ids, rng.random(48).astype(np.float32) * 2.0)
+    sess.drain_fired()
+    with tempfile.TemporaryDirectory() as d:
+        sess.ckpt_dir = d
+        sess.save(blocking=True)
+        restored = EagrSession.restore(d, graph=g)
+        (q2,) = restored.queries
+        e2 = q2.group.engine
+        al2 = e2.alerts
+        assert al2 is not None and al2.n_alerts == eng.alerts.n_alerts
+        assert [a.aid for a in restored.alerts] == [ah.aid]
+        assert restored.alerts[0].spec.debounce == 2.0
+        eng.alerts._pull_dynamic()
+        al2._pull_dynamic()
+        for f in ("armed", "last_fire", "ref", "last_m"):
+            np.testing.assert_array_equal(eng.alerts._dyn[f], al2._dyn[f])
+        # restored stream continues in lockstep with the original
+        push_a, push_b = [], []
+        for _ in range(8):
+            ids = rng.integers(0, 120, size=48)
+            vals = rng.random(48).astype(np.float32) * 2.0
+            sess.update(ids, vals)
+            restored.update(ids, vals)
+        push_a = _flat(sess.drain_fired())
+        push_b = _flat(restored.drain_fired())
+        assert push_a == push_b
